@@ -1,0 +1,127 @@
+"""Shared benchmark harness: index adapters + timing.
+
+Every index exposes build/insert/delete/view behind one dict so each
+figure script is a loop over INDEXES x distributions. CPU wall-times
+here are *relative* evidence (the paper's absolute numbers come from a
+112-core Xeon); the claims we validate are ratios — e.g. SPaC vs the
+total-order CPAM baseline, P-Orth vs the Zd-style presort — which are
+hardware-portable because both sides run the same JAX/XLA substrate.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import baselines, porth, queries, spac
+from repro.data import points as gen
+
+HI = gen.DEFAULT_HI
+ROOT_LO = jnp.zeros((2,), jnp.int32)
+ROOT_HI = jnp.full((2,), HI, jnp.int32)
+
+
+def _cap(n, phi):
+    return 4 * ((n + phi - 1) // phi) + 64
+
+
+def make_indexes(phi: int = 32, total_cap: int | None = None):
+    """total_cap: row capacity sized for the *max* points ever present."""
+    def cap(n):
+        return _cap(total_cap or n, phi)
+
+    return {
+        "porth": dict(
+            build=lambda p: porth.build(
+                p, ROOT_LO, ROOT_HI, phi=phi, capacity_rows=cap(len(p))),
+            insert=lambda t, p: porth.insert(t, p),
+            delete=lambda t, p: porth.delete(t, p),
+            view=lambda t: t.view()),
+        "spac-h": dict(
+            build=lambda p: spac.build(
+                p, phi=phi, curve="hilbert", capacity_rows=cap(len(p))),
+            insert=lambda t, p: spac.insert(t, p),
+            delete=lambda t, p: spac.delete(t, p),
+            view=lambda t: t.view()),
+        "spac-z": dict(
+            build=lambda p: spac.build(
+                p, phi=phi, curve="morton", capacity_rows=cap(len(p))),
+            insert=lambda t, p: spac.insert(t, p),
+            delete=lambda t, p: spac.delete(t, p),
+            view=lambda t: t.view()),
+        "cpam-h": dict(   # total-order ablation: sorts every touched row
+            build=lambda p: spac.build(
+                p, phi=phi, curve="hilbert", capacity_rows=cap(len(p))),
+            insert=lambda t, p: spac.insert(t, p, sort_rows=True),
+            delete=lambda t, p: spac.delete(t, p),
+            view=lambda t: t.view()),
+        "cpam-z": dict(
+            build=lambda p: spac.build(
+                p, phi=phi, curve="morton", capacity_rows=cap(len(p))),
+            insert=lambda t, p: spac.insert(t, p, sort_rows=True),
+            delete=lambda t, p: spac.delete(t, p),
+            view=lambda t: t.view()),
+        "zd": dict(
+            build=lambda p: baselines.zd_build(
+                p, phi=phi, capacity_rows=cap(len(p))),
+            insert=lambda t, p: baselines.zd_insert(
+                t, p, capacity_rows=t.pts.shape[0]),
+            delete=lambda t, p: baselines.zd_delete(
+                t, p, capacity_rows=t.pts.shape[0]),
+            view=lambda t: t.view()),
+        "kd": dict(
+            build=lambda p: baselines.kd_build(
+                p, phi=phi, capacity_rows=cap(len(p))),
+            insert=lambda t, p: baselines.kd_insert(
+                t, p, capacity_rows=t.pts.shape[0]),
+            delete=lambda t, p: baselines.kd_delete(
+                t, p, capacity_rows=t.pts.shape[0]),
+            view=lambda t: t.view()),
+    }
+
+
+def timed(fn, *args, warmup: int = 1, reps: int = 3, **kw):
+    """Median wall time with block_until_ready (jit-compile excluded)."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2], out
+
+
+def timed_once(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    return time.perf_counter() - t0, out
+
+
+@functools.lru_cache(maxsize=None)
+def _cached_points(dist: str, n: int, seed: int, dim: int = 2):
+    return gen.GENERATORS[dist](jax.random.PRNGKey(seed), n, dim)
+
+
+def points_for(dist: str, n: int, seed: int = 0, dim: int = 2):
+    return _cached_points(dist, n, seed, dim)
+
+
+def knn_queries(dist: str, nq: int, seed: int = 9, dim: int = 2):
+    """InD queries: drawn from the same distribution; OOD: uniform."""
+    ind = gen.GENERATORS[dist](jax.random.PRNGKey(seed), nq, dim)
+    ood = gen.uniform(jax.random.PRNGKey(seed + 1), nq, dim)
+    return ind, ood
+
+
+def fmt_row(name, cells, w=9):
+    return name.ljust(10) + " ".join(
+        (f"{c:{w}.3f}" if isinstance(c, float) else str(c).rjust(w))
+        for c in cells)

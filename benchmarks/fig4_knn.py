@@ -1,0 +1,60 @@
+"""Paper Fig. 4: k-NN time vs k (1, 10, 100), InD + OOD, after
+incremental insertion — validates that query cost grows sub-linearly
+with k and the Hilbert/Morton and space-partitioning/R-tree orderings
+hold across k.
+
+Run:  PYTHONPATH=src python -m benchmarks.fig4_knn --n 50000
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.core import queries as Q
+
+from . import common
+
+KS = (1, 10, 100)
+
+
+def run(n=50_000, nq=500, dist="varden", indexes=None, phi=32,
+        batch_ratio=0.01, verbose=True):
+    idx = common.make_indexes(phi=phi, total_cap=n)
+    names = indexes or ["porth", "spac-h", "spac-z", "kd", "zd"]
+    pts = common.points_for(dist, n)
+    ind_q, ood_q = common.knn_queries(dist, nq)
+    out = {}
+    m = max(int(n * batch_ratio), 64)
+    for name in names:
+        ix = idx[name]
+        tree = ix["build"](pts[: n // 2])
+        steps = (n // 2) // m
+        for b in range(steps):
+            tree = ix["insert"](tree, pts[n // 2 + b * m: n // 2 +
+                                          (b + 1) * m])
+        view = ix["view"](tree)
+        rec = {}
+        for k in KS:
+            rec[f"ind_k{k}"], _ = common.timed(Q.knn, view, ind_q, k)
+            rec[f"ood_k{k}"], _ = common.timed(Q.knn, view, ood_q, k)
+        out[name] = rec
+        if verbose:
+            print(common.fmt_row(name, [rec[f"ind_k{k}"] for k in KS]
+                                 + [rec[f"ood_k{k}"] for k in KS]),
+                  flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=50_000)
+    ap.add_argument("--nq", type=int, default=500)
+    ap.add_argument("--dist", default="varden")
+    args = ap.parse_args()
+    print(common.fmt_row("index", [f"InD k={k}" for k in KS]
+                         + [f"OOD k={k}" for k in KS]))
+    run(n=args.n, nq=args.nq, dist=args.dist)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Paper Fig. 5: range-list time vs output size.
+
+Claim validated: for large ranges, emitting the result list dominates
+and the gap between index families shrinks (range queries are less
+index-sensitive than kNN).
+
+Run:  PYTHONPATH=src python -m benchmarks.fig5_range --n 50000
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.core import queries as Q
+from repro.data.points import query_boxes
+
+from . import common
+
+SIDES = (2**10, 2**12, 2**14)    # of a 2^20 domain
+
+
+def run(n=50_000, nq=200, dist="uniform", indexes=None, phi=32,
+        verbose=True):
+    idx = common.make_indexes(phi=phi, total_cap=n)
+    names = indexes or ["porth", "spac-h", "spac-z", "kd", "zd"]
+    pts = common.points_for(dist, n)
+    out = {}
+    for name in names:
+        ix = idx[name]
+        tree = ix["build"](pts)
+        view = ix["view"](tree)
+        rec = {}
+        for side in SIDES:
+            lo, hi = query_boxes(jax.random.PRNGKey(side), nq, 2, side)
+            # expected hits ~ n * (side/2^20)^2; cap with slack
+            exp = max(int(n * (side / common.HI) ** 2 * 8), 64)
+            t, (ids, cnt, trunc) = common.timed(
+                Q.range_list, view, lo, hi, 1024, exp)
+            rec[f"side_{side}"] = t
+            rec[f"out_{side}"] = float(cnt.mean())
+            rec[f"trunc_{side}"] = int(trunc.sum())
+        out[name] = rec
+        if verbose:
+            print(common.fmt_row(
+                name, [rec[f"side_{s}"] for s in SIDES]
+                + [rec[f"out_{s}"] for s in SIDES]), flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=50_000)
+    ap.add_argument("--nq", type=int, default=200)
+    ap.add_argument("--dist", default="uniform")
+    args = ap.parse_args()
+    print(common.fmt_row("index", [f"t side={s}" for s in SIDES]
+                         + [f"avg out s={s}" for s in SIDES]))
+    run(n=args.n, nq=args.nq, dist=args.dist)
+
+
+if __name__ == "__main__":
+    main()

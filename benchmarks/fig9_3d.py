@@ -1,0 +1,84 @@
+"""Paper Fig. 9 (appendix E): 3D synthetic datasets.
+
+Same grid as Fig. 3 but dim=3 (octree splits for P-Orth, 10-bit/dim
+Morton/Hilbert codes for SPaC). Validates that the SFC-based SPaC is
+least sensitive to dimensionality.
+
+Run:  PYTHONPATH=src python -m benchmarks.fig9_3d --n 30000
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+
+from repro.core import porth, queries as Q, spac
+
+from . import common
+
+HI3 = 1 << 20
+
+
+def make_indexes_3d(phi=32, total_cap=None):
+    lo = jnp.zeros((3,), jnp.int32)
+    hi = jnp.full((3,), HI3, jnp.int32)
+
+    def cap(n):
+        return 4 * ((total_cap or n) // phi + 1) + 64
+
+    return {
+        "porth": dict(
+            build=lambda p: porth.build(p, lo, hi, phi=phi, lam=2,
+                                        capacity_rows=cap(len(p))),
+            insert=porth.insert, delete=porth.delete,
+            view=lambda t: t.view()),
+        "spac-h": dict(
+            build=lambda p: spac.build(p, phi=phi, curve="hilbert",
+                                       bits=10, coord_bits=20,
+                                       capacity_rows=cap(len(p))),
+            insert=spac.insert, delete=spac.delete,
+            view=lambda t: t.view()),
+        "spac-z": dict(
+            build=lambda p: spac.build(p, phi=phi, curve="morton",
+                                       bits=10, coord_bits=20,
+                                       capacity_rows=cap(len(p))),
+            insert=spac.insert, delete=spac.delete,
+            view=lambda t: t.view()),
+    }
+
+
+def run(n=30_000, nq=300, verbose=True):
+    out = {}
+    for dist in ("uniform", "varden"):
+        pts = common.points_for(dist, n, dim=3)
+        ind_q, _ = common.knn_queries(dist, nq, dim=3)
+        for name, ix in make_indexes_3d(total_cap=n).items():
+            rec = {}
+            rec["build"], tree = common.timed(ix["build"], pts)
+            m = max(n // 100, 64)
+            rec["ins"], tree = common.timed(ix["insert"], tree,
+                                            pts[:m])
+            rec["del"], tree = common.timed(ix["delete"], tree, pts[:m])
+            rec["knn"], _ = common.timed(Q.knn, ix["view"](tree), ind_q,
+                                         10)
+            out[(dist, name)] = rec
+            if verbose:
+                print(common.fmt_row(f"{dist[:6]}/{name}",
+                                     [rec["build"], rec["ins"],
+                                      rec["del"], rec["knn"]]),
+                      flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=30_000)
+    args = ap.parse_args()
+    print(common.fmt_row("dist/index", ["build", "ins 1%", "del 1%",
+                                        "knn10"]))
+    run(n=args.n)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Roofline report: renders EXPERIMENTS.md §Roofline tables from the
+dry-run JSONL records (results/dryrun_*.jsonl).
+
+Each row: per-device compute/memory/collective seconds, dominant term,
+MODEL_FLOPS/HLO_FLOPS (useful fraction), resident state GiB, and the
+step-time lower bound max(terms) -> roofline fraction.
+
+Run:  PYTHONPATH=src python -m benchmarks.roofline results/*.jsonl
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+
+
+def load(paths):
+    recs = {}
+    for path in paths:
+        for line in open(path):
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"])] = r   # last wins
+    return recs
+
+
+def table(recs, mesh="16x16"):
+    rows = []
+    hdr = (f"{'arch':26s} {'shape':12s} {'compute_s':>10s} {'memory_s':>10s}"
+           f" {'collect_s':>10s} {'dominant':>10s} {'useful':>7s}"
+           f" {'state GiB':>9s} {'bound_s':>10s}")
+    rows.append(hdr)
+    rows.append("-" * len(hdr))
+    for (arch, shape, m), r in sorted(recs.items()):
+        if m != mesh:
+            continue
+        if not r.get("ok"):
+            rows.append(f"{arch:26s} {shape:12s} FAILED: "
+                        f"{r.get('error', '?')[:60]}")
+            continue
+        t = r["terms"]
+        bound = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        state = r["memory"].get("argument_size_in_bytes", 0) / 2**30
+        rows.append(
+            f"{arch:26s} {shape:12s} {t['compute_s']:10.3e}"
+            f" {t['memory_s']:10.3e} {t['collective_s']:10.3e}"
+            f" {t['bottleneck'][:-2]:>10s} {r['useful_frac']:7.1%}"
+            f" {state:9.2f} {bound:10.3e}")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="*",
+                    default=sorted(glob.glob("results/dryrun_*.jsonl")))
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    if not args.paths:
+        print("no dry-run records found — run repro.launch.dryrun first")
+        return
+    recs = load(args.paths)
+    print(f"== roofline (per-device, mesh {args.mesh}) ==")
+    print(table(recs, args.mesh))
+    n_ok = sum(1 for r in recs.values() if r.get("ok"))
+    print(f"\n{n_ok}/{len(recs)} cells ok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Benchmark driver: one section per paper table/figure + roofline.
+
+``python -m benchmarks.run`` runs the full CPU suite at reduced sizes
+(this container has 1 core; the paper used 112). ``--quick`` shrinks
+further for smoke checks; ``--full`` enlarges. The dry-run/roofline
+section only *reads* previously produced results/dryrun_*.jsonl (the
+512-device dry-run must run in its own process because of XLA_FLAGS).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import time
+
+
+def section(title):
+    print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--skip", default="", help="comma list of sections")
+    args = ap.parse_args()
+    n = 10_000 if args.quick else (200_000 if args.full else 30_000)
+    nq = 200 if args.quick else 400
+    skip = set(args.skip.split(",")) if args.skip else set()
+    t_start = time.time()
+
+    if "fig3" not in skip:
+        section(f"Fig. 3 — build/update/query grid (n={n})")
+        from . import common, fig3_grid
+        hdr = ["build", "ins10%", "ins1%", "del10%", "del1%", "knnInD",
+               "knnOOD", "rangeC"]
+        print(common.fmt_row("dist/index", hdr))
+        out = fig3_grid.run(n=n, nq=nq)
+        print("\n-- paper-claim validation --")
+        for claim, val, okc in fig3_grid.validate(out):
+            print(f"  [{'PASS' if okc else 'FAIL'}] {claim}: {val:.2f}x")
+
+    if "fig4" not in skip:
+        section(f"Fig. 4 — kNN vs k (n={n}, varden)")
+        from . import common, fig4_knn
+        print(common.fmt_row("index", [f"InD k={k}" for k in fig4_knn.KS]
+                             + [f"OOD k={k}" for k in fig4_knn.KS]))
+        fig4_knn.run(n=n, nq=nq)
+
+    if "fig5" not in skip:
+        section(f"Fig. 5 — range-list vs output size (n={n})")
+        from . import common, fig5_range
+        print(common.fmt_row("index",
+                             [f"t s={s}" for s in fig5_range.SIDES]
+                             + [f"out s={s}" for s in fig5_range.SIDES]))
+        fig5_range.run(n=n, nq=max(nq // 2, 100))
+
+    if "fig10" not in skip:
+        section(f"Fig. 10 — single-batch update size sweep (n={2 * n})")
+        from . import common, fig10_batch
+        print(common.fmt_row("index",
+                             [f"ins {r}" for r in fig10_batch.RATIOS]
+                             + [f"del {r}" for r in fig10_batch.RATIOS]))
+        fig10_batch.run(n=2 * n)
+
+    if "fig9" not in skip:
+        section(f"Fig. 9 — 3D datasets (n={max(n // 2, 10_000)})")
+        from . import common, fig9_3d
+        print(common.fmt_row("dist/index",
+                             ["build", "ins 1%", "del 1%", "knn10"]))
+        fig9_3d.run(n=max(n // 2, 10_000))
+
+    if "roofline" not in skip:
+        section("Roofline — from dry-run records (results/*.jsonl)")
+        from . import roofline
+        paths = sorted(glob.glob("results/dryrun_*.jsonl"))
+        if paths:
+            recs = roofline.load(paths)
+            for mesh in ("16x16", "2x16x16"):
+                if any(m == mesh for (_, _, m) in recs):
+                    print(f"\n-- mesh {mesh} --")
+                    print(roofline.table(recs, mesh))
+        else:
+            print("(no dry-run records; run: PYTHONPATH=src python -m "
+                  "repro.launch.dryrun --arch all --mesh both --out "
+                  "results/dryrun.jsonl)")
+
+    print(f"\ntotal benchmark time: {time.time() - t_start:,.0f}s")
+
+
+if __name__ == "__main__":
+    main()

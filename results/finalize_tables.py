@@ -1,0 +1,41 @@
+"""Insert the optimized roofline table + baseline/optimized deltas into
+EXPERIMENTS.md (run once the *_opt.jsonl sweeps are complete)."""
+
+import json
+import sys
+
+sys.path.insert(0, ".")
+from benchmarks.roofline import load, table  # noqa: E402
+
+opt = load(["results/dryrun_single_opt.jsonl"])
+base = load(["results/dryrun_single.jsonl"])
+tbl = table(opt, "16x16")
+
+# summary deltas vs baseline
+lines = ["", "Collective-term baseline -> optimized (single pod):", "```"]
+for key in sorted(opt):
+    a, s, m = key
+    if key in base and base[key].get("ok") and opt[key].get("ok"):
+        b = base[key]["terms"]["collective_s"]
+        o = opt[key]["terms"]["collective_s"]
+        if b > 0 and o > 0:
+            lines.append(f"{a:26s} {s:12s} {b:10.3e} -> {o:10.3e}"
+                         f"  ({b / o:6.1f}x)")
+lines.append("```")
+
+marker = ("(regenerate: `python -m benchmarks.roofline "
+          "results/dryrun_single_opt.jsonl`)\n— inserted at finalization "
+          "from results/dryrun_single_opt.jsonl.")
+repl = ("(regenerate: `python -m benchmarks.roofline "
+        "results/dryrun_single_opt.jsonl`)\n\n```\n" + tbl + "\n```\n"
+        + "\n".join(lines))
+
+src = open("EXPERIMENTS.md").read()
+assert marker in src, "marker not found"
+open("EXPERIMENTS.md", "w").write(src.replace(marker, repl))
+n_ok = sum(1 for r in opt.values() if r.get("ok"))
+print(f"inserted: {n_ok}/{len(opt)} single-pod cells ok")
+
+multi = load(["results/dryrun_multi_opt.jsonl"])
+n_ok_m = sum(1 for r in multi.values() if r.get("ok"))
+print(f"multi-pod: {n_ok_m}/{len(multi)} cells ok")

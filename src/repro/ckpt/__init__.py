@@ -1,0 +1,2 @@
+from .checkpoint import (async_save, load_manifest, restore, save,  # noqa
+                         wait_pending)

@@ -1,0 +1,14 @@
+"""Psi-JAX core: the paper's parallel dynamic spatial indexes.
+
+Public API:
+  * ``porth``   -- P-Orth tree (SFC-free parallel orth-tree, paper Sec. 3)
+  * ``spac``    -- SPaC-tree family (parallel R-tree over SFC order, Sec. 4)
+  * ``queries`` -- shared exact batched kNN / range engine
+  * ``sfc``     -- Morton / Hilbert encodings
+  * ``baselines`` -- kd-tree, Zd-like, CPAM-like comparison indexes
+  * ``distributed`` -- shard_map-sharded index across a device mesh
+"""
+
+from . import baselines, leafstore, porth, queries, sfc, spac  # noqa: F401
+
+__all__ = ["baselines", "leafstore", "porth", "queries", "sfc", "spac"]

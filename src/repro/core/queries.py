@@ -1,0 +1,167 @@
+"""Shared batched query engine over leaf-row indexes.
+
+TPU adaptation of the paper's queries (Sec. 2.2): the best-first kNN with a
+priority queue becomes a *chunked frontier traversal* — rows are visited in
+ascending order of bbox distance, a running top-k is maintained, and the loop
+stops as soon as the next chunk's bbox lower bound exceeds the current k-th
+best distance. This is exact (same pruning argument as best-first search) and
+fully vectorized over queries via ``vmap``.
+
+Range queries gather candidate rows whose bbox overlaps the query box (fixed
+capacity ``max_rows``, with a truncation flag so callers can size it).
+
+The engine only needs the "leaf directory view" every index exposes:
+    pts (R, C, D), valid (R, C), active (R,), bbox_lo/hi (R, D)
+so P-Orth trees, SPaC trees and the kd/Zd baselines all share it.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .leafstore import BIG
+
+
+class LeafView(NamedTuple):
+    pts: jax.Array      # (R, C, D) float32 or int32
+    valid: jax.Array    # (R, C) bool
+    active: jax.Array   # (R,) bool
+    bbox_lo: jax.Array  # (R, D)
+    bbox_hi: jax.Array  # (R, D)
+
+
+def _f32(x):
+    return x.astype(jnp.float32)
+
+
+def dist2_point_box(q, lo, hi):
+    """Squared distance from point q (D,) to boxes (R, D)."""
+    d = jnp.maximum(jnp.maximum(_f32(lo) - _f32(q), _f32(q) - _f32(hi)), 0.0)
+    return jnp.sum(d * d, axis=-1)
+
+
+def _knn_single(view: LeafView, q, k: int, chunk: int):
+    R, C, dim = view.pts.shape
+    n_chunks = (R + chunk - 1) // chunk
+    dmin2 = jnp.where(view.active, dist2_point_box(q, view.bbox_lo,
+                                                   view.bbox_hi), BIG)
+    row_order = jnp.argsort(dmin2).astype(jnp.int32)
+    dmin2_sorted = dmin2[row_order]
+    pad = n_chunks * chunk - R
+    row_order = jnp.pad(row_order, (0, pad), constant_values=0)
+    dmin2_sorted = jnp.pad(dmin2_sorted, (0, pad), constant_values=BIG)
+
+    best_d2 = jnp.full((k,), BIG)
+    best_id = jnp.full((k,), -1, jnp.int32)
+
+    def cond(state):
+        i, best_d2, _ = state
+        frontier = jax.lax.dynamic_slice(dmin2_sorted, (i * chunk,), (1,))[0]
+        return (i < n_chunks) & (frontier <= best_d2[k - 1])
+
+    def body(state):
+        i, best_d2, best_id = state
+        rows = jax.lax.dynamic_slice(row_order, (i * chunk,), (chunk,))
+        pts = view.pts[rows]                      # (chunk, C, D)
+        ok = view.valid[rows] & view.active[rows][:, None]
+        diff = _f32(pts) - _f32(q)[None, None, :]
+        d2 = jnp.sum(diff * diff, axis=-1)
+        d2 = jnp.where(ok, d2, BIG).reshape(-1)
+        ids = (rows[:, None] * C + jnp.arange(C, dtype=jnp.int32)[None, :]
+               ).reshape(-1)
+        cat_d2 = jnp.concatenate([best_d2, d2])
+        cat_id = jnp.concatenate([best_id, ids])
+        neg, sel = jax.lax.top_k(-cat_d2, k)
+        return i + 1, -neg, cat_id[sel]
+
+    _, best_d2, best_id = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), best_d2, best_id))
+    best_id = jnp.where(best_d2 >= BIG, -1, best_id)
+    return best_d2, best_id
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def knn(view: LeafView, queries, k: int, chunk: int = 8):
+    """Exact batched k-nearest-neighbors.
+
+    queries: (Q, D). Returns (d2 (Q, k) ascending, flat ids (Q, k) = row*C+slot,
+    -1 padded when fewer than k points exist).
+    """
+    return jax.vmap(lambda q: _knn_single(view, q, k, chunk))(queries)
+
+
+def gather_points(view: LeafView, flat_ids):
+    """Resolve flat ids (row*C+slot) from knn/range_list into coordinates."""
+    R, C, dim = view.pts.shape
+    safe = jnp.maximum(flat_ids, 0)
+    pts = view.pts.reshape(R * C, dim)[safe]
+    return jnp.where((flat_ids >= 0)[..., None], pts, 0)
+
+
+def _boxes_overlap(lo_a, hi_a, lo_b, hi_b):
+    return jnp.all((_f32(lo_a) <= _f32(hi_b)) & (_f32(lo_b) <= _f32(hi_a)),
+                   axis=-1)
+
+
+def _range_rows(view: LeafView, lo, hi, max_rows: int):
+    overlap = _boxes_overlap(view.bbox_lo, view.bbox_hi, lo[None, :],
+                             hi[None, :]) & view.active
+    n_overlap = jnp.sum(overlap, dtype=jnp.int32)
+    key = jnp.where(overlap, jnp.arange(overlap.shape[0], dtype=jnp.int32),
+                    jnp.int32(overlap.shape[0]))
+    rows = jnp.argsort(key)[:max_rows].astype(jnp.int32)
+    rows_ok = overlap[rows]
+    truncated = n_overlap > max_rows
+    return rows, rows_ok, truncated
+
+
+def _range_count_single(view: LeafView, lo, hi, max_rows: int):
+    rows, rows_ok, truncated = _range_rows(view, lo, hi, max_rows)
+    pts = view.pts[rows]
+    inside = (jnp.all((_f32(pts) >= _f32(lo)) & (_f32(pts) <= _f32(hi)),
+                      axis=-1)
+              & view.valid[rows] & rows_ok[:, None])
+    return jnp.sum(inside, dtype=jnp.int32), truncated
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def range_count(view: LeafView, lo, hi, max_rows: int = 128):
+    """Exact batched range-count. lo/hi: (Q, D) inclusive boxes.
+
+    Returns (counts (Q,), truncated (Q,)); a True truncated flag means
+    max_rows was too small for exactness (resize and re-run)."""
+    return jax.vmap(lambda l, h: _range_count_single(view, l, h, max_rows))(
+        lo, hi)
+
+
+def _range_list_single(view: LeafView, lo, hi, max_rows: int, cap: int):
+    R, C, dim = view.pts.shape
+    rows, rows_ok, truncated = _range_rows(view, lo, hi, max_rows)
+    pts = view.pts[rows]
+    inside = (jnp.all((_f32(pts) >= _f32(lo)) & (_f32(pts) <= _f32(hi)),
+                      axis=-1)
+              & view.valid[rows] & rows_ok[:, None])
+    flat_in = inside.reshape(-1)
+    flat_ids = (rows[:, None] * C
+                + jnp.arange(C, dtype=jnp.int32)[None, :]).reshape(-1)
+    # stable compaction of hits to the front
+    key = jnp.where(flat_in, jnp.arange(flat_in.shape[0], dtype=jnp.int32),
+                    jnp.int32(flat_in.shape[0]))
+    sel = jnp.argsort(key)[:cap]
+    ids = jnp.where(flat_in[sel], flat_ids[sel], -1)
+    count = jnp.sum(flat_in, dtype=jnp.int32)
+    return ids, count, truncated | (count > cap)
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4))
+def range_list(view: LeafView, lo, hi, max_rows: int = 128, cap: int = 512):
+    """Exact batched range-report with fixed output capacity.
+
+    Returns (ids (Q, cap) flat row*C+slot padded with -1, counts (Q,),
+    truncated (Q,))."""
+    return jax.vmap(
+        lambda l, h: _range_list_single(view, l, h, max_rows, cap))(lo, hi)

@@ -1,0 +1,217 @@
+"""Space-filling curves: Morton (Z) and Hilbert encodings, vectorized.
+
+The paper (Sec. 2.2) uses 64-bit codes (32 bits/dim in 2D, 21 bits/dim in 3D).
+JAX defaults to 32-bit; we default to uint32 codes (16 bits/dim in 2D, 10 in 3D)
+and transparently use uint64 when ``bits * D > 32`` (requires JAX_ENABLE_X64).
+
+The P-Orth tree never calls into this module (its selling point — Sec. 3 of the
+paper); only the SPaC family and the Zd-tree baseline do.
+
+Hilbert encoding follows Skilling, "Programming the Hilbert curve" (2004):
+coordinates are transformed in-place into the "transpose" form, whose bit
+interleave is the Hilbert index. All ops are vectorized over points; the loops
+below run over *bit levels* (<= 32 unrolled iterations), not points.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "code_dtype",
+    "morton_encode",
+    "hilbert_encode",
+    "hilbert_decode",
+    "interleave_bits",
+    "max_bits_for_dtype",
+]
+
+
+def code_dtype(dim: int, bits: int):
+    """Smallest unsigned dtype that can hold a ``dim * bits``-bit code."""
+    total = dim * bits
+    if total <= 32:
+        return jnp.uint32
+    if total <= 64:
+        return jnp.uint64
+    raise ValueError(f"code of {total} bits does not fit a 64-bit word "
+                     "(paper Sec. 3, 'Applicability': use the P-Orth tree)")
+
+
+def max_bits_for_dtype(dim: int, dtype) -> int:
+    width = jnp.dtype(dtype).itemsize * 8
+    return width // dim
+
+
+def _part1by1(x, dtype):
+    """Spread bits of x so there is one zero bit between each (2D Morton)."""
+    x = x.astype(dtype)
+    if dtype == jnp.uint64:
+        x &= jnp.uint64(0xFFFFFFFF)
+        x = (x | (x << 16)) & jnp.uint64(0x0000FFFF0000FFFF)
+        x = (x | (x << 8)) & jnp.uint64(0x00FF00FF00FF00FF)
+        x = (x | (x << 4)) & jnp.uint64(0x0F0F0F0F0F0F0F0F)
+        x = (x | (x << 2)) & jnp.uint64(0x3333333333333333)
+        x = (x | (x << 1)) & jnp.uint64(0x5555555555555555)
+    else:
+        x &= jnp.uint32(0xFFFF)
+        x = (x | (x << 8)) & jnp.uint32(0x00FF00FF)
+        x = (x | (x << 4)) & jnp.uint32(0x0F0F0F0F)
+        x = (x | (x << 2)) & jnp.uint32(0x33333333)
+        x = (x | (x << 1)) & jnp.uint32(0x55555555)
+    return x
+
+
+def _part1by2(x, dtype):
+    """Spread bits of x so there are two zero bits between each (3D Morton)."""
+    x = x.astype(dtype)
+    if dtype == jnp.uint64:
+        x &= jnp.uint64(0x1FFFFF)  # 21 bits
+        x = (x | (x << 32)) & jnp.uint64(0x1F00000000FFFF)
+        x = (x | (x << 16)) & jnp.uint64(0x1F0000FF0000FF)
+        x = (x | (x << 8)) & jnp.uint64(0x100F00F00F00F00F)
+        x = (x | (x << 4)) & jnp.uint64(0x10C30C30C30C30C3)
+        x = (x | (x << 2)) & jnp.uint64(0x1249249249249249)
+    else:
+        x &= jnp.uint32(0x3FF)  # 10 bits
+        x = (x | (x << 16)) & jnp.uint32(0x030000FF)
+        x = (x | (x << 8)) & jnp.uint32(0x0300F00F)
+        x = (x | (x << 4)) & jnp.uint32(0x030C30C3)
+        x = (x | (x << 2)) & jnp.uint32(0x09249249)
+    return x
+
+
+def interleave_bits(coords, bits: int):
+    """Interleave integer coordinates (..., D) into a single SFC word.
+
+    Bit ``j`` of ``coords[..., i]`` lands at position ``j * D + (D - 1 - i)``,
+    i.e. coords[..., 0] provides the most-significant bit of each group —
+    matching both the Morton convention and Skilling's transpose layout.
+    """
+    dim = coords.shape[-1]
+    dtype = code_dtype(dim, bits)
+    c = coords.astype(dtype)
+    if dim == 2:
+        return (_part1by1(c[..., 0], dtype) << 1) | _part1by1(c[..., 1], dtype)
+    if dim == 3:
+        return (
+            (_part1by2(c[..., 0], dtype) << 2)
+            | (_part1by2(c[..., 1], dtype) << 1)
+            | _part1by2(c[..., 2], dtype)
+        )
+    # generic (D > 3): plain shift loop over bits.
+    out = jnp.zeros(coords.shape[:-1], dtype)
+    one = jnp.array(1, dtype)
+    for b in range(bits):
+        for i in range(dim):
+            bit = (c[..., i] >> b) & one
+            out = out | (bit << (b * dim + (dim - 1 - i)))
+    return out
+
+
+def morton_encode(coords, bits: int | None = None):
+    """Morton (Z-curve) code of non-negative integer coordinates (..., D)."""
+    dim = coords.shape[-1]
+    if bits is None:
+        bits = max_bits_for_dtype(dim, jnp.uint32)
+    return interleave_bits(coords, bits)
+
+
+def _axes_to_transpose(coords, bits: int):
+    """Skilling's AxestoTranspose, vectorized over points.
+
+    coords: (..., D) unsigned ints with values < 2**bits.
+    Returns X (..., D) in 'transpose' form; interleaving X gives the Hilbert
+    index.
+    """
+    dim = coords.shape[-1]
+    dtype = code_dtype(dim, bits)
+    X = [coords[..., i].astype(dtype) for i in range(dim)]
+    M = np.uint64(1) << np.uint64(bits - 1)
+
+    # Inverse undo
+    Q = int(M)
+    while Q > 1:
+        P = jnp.array(Q - 1, dtype)
+        Qc = jnp.array(Q, dtype)
+        for i in range(dim):
+            has = (X[i] & Qc) != 0
+            # invert low bits of X[0], or exchange low bits of X[0] and X[i]
+            t = jnp.where(has, jnp.zeros_like(X[0]), (X[0] ^ X[i]) & P)
+            X0_inv = jnp.where(has, X[0] ^ P, X[0])
+            X[0] = X0_inv ^ t
+            if i != 0:
+                X[i] = X[i] ^ t
+        Q >>= 1
+
+    # Gray encode
+    for i in range(1, dim):
+        X[i] = X[i] ^ X[i - 1]
+    t = jnp.zeros_like(X[0])
+    Q = int(M)
+    while Q > 1:
+        Qc = jnp.array(Q, dtype)
+        t = jnp.where((X[dim - 1] & Qc) != 0, t ^ (Qc - 1), t)
+        Q >>= 1
+    for i in range(dim):
+        X[i] = X[i] ^ t
+    return jnp.stack(X, axis=-1)
+
+
+def _transpose_to_axes(X, bits: int):
+    """Skilling's TransposetoAxes (inverse of _axes_to_transpose)."""
+    dim = X.shape[-1]
+    dtype = code_dtype(dim, bits)
+    X = [X[..., i].astype(dtype) for i in range(dim)]
+    N = np.uint64(2) << np.uint64(bits - 1)
+
+    # Gray decode by H ^ (H/2)
+    t = X[dim - 1] >> 1
+    for i in range(dim - 1, 0, -1):
+        X[i] = X[i] ^ X[i - 1]
+    X[0] = X[0] ^ t
+
+    # Undo excess work
+    Q = 2
+    while Q != int(N):
+        P = jnp.array(Q - 1, dtype)
+        Qc = jnp.array(Q, dtype)
+        for i in range(dim - 1, -1, -1):
+            has = (X[i] & Qc) != 0
+            t = jnp.where(has, jnp.zeros_like(X[0]), (X[0] ^ X[i]) & P)
+            X0_inv = jnp.where(has, X[0] ^ P, X[0])
+            X[0] = X0_inv ^ t
+            if i != 0:
+                X[i] = X[i] ^ t
+        Q <<= 1
+    return jnp.stack(X, axis=-1)
+
+
+def hilbert_encode(coords, bits: int | None = None):
+    """Hilbert code of non-negative integer coordinates (..., D)."""
+    dim = coords.shape[-1]
+    if bits is None:
+        bits = max_bits_for_dtype(dim, jnp.uint32)
+    X = _axes_to_transpose(coords, bits)
+    return interleave_bits(X, bits)
+
+
+def _deinterleave_bits(code, dim: int, bits: int):
+    dtype = code_dtype(dim, bits)
+    code = code.astype(dtype)
+    one = jnp.array(1, dtype)
+    outs = []
+    for i in range(dim):
+        x = jnp.zeros_like(code)
+        for b in range(bits):
+            bit = (code >> (b * dim + (dim - 1 - i))) & one
+            x = x | (bit << b)
+        outs.append(x)
+    return jnp.stack(outs, axis=-1)
+
+
+def hilbert_decode(code, dim: int, bits: int):
+    """Inverse of hilbert_encode (used only by tests)."""
+    X = _deinterleave_bits(code, dim, bits)
+    return _transpose_to_axes(X, bits)

@@ -1,0 +1,1 @@
+from . import points, tokens  # noqa: F401

@@ -1,0 +1,77 @@
+"""Synthetic spatial workloads from the paper (Sec. 5.1), in JAX.
+
+* Uniform   — i.i.d. uniform integer coordinates.
+* Sweepline — uniform points sorted along dim 0 (skewed *update order*).
+* Varden    — random walk with restarts (skewed *point distribution*,
+  clustered; after Gan & Tao [27]).
+
+All generators are deterministic in (seed, shard) so a restarted job
+replays the exact same stream — required for fault-tolerant training/update
+pipelines (DESIGN.md Sec. 5).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_HI = 1 << 20  # coordinate range [0, 2^20), 64-bit-free test default
+
+
+@functools.partial(jax.jit, static_argnames=("n", "dim", "hi"))
+def uniform(key, n: int, dim: int = 2, hi: int = DEFAULT_HI):
+    return jax.random.randint(key, (n, dim), 0, hi, dtype=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "dim", "hi"))
+def sweepline(key, n: int, dim: int = 2, hi: int = DEFAULT_HI):
+    p = uniform(key, n, dim, hi)
+    return p[jnp.argsort(p[:, 0])]
+
+
+@functools.partial(jax.jit, static_argnames=("n", "dim", "hi", "step",
+                                             "restart_p"))
+def varden(key, n: int, dim: int = 2, hi: int = DEFAULT_HI, step: int = 50,
+           restart_p: float = 0.01):
+    """Random walk with restarts — vectorized via one scan over steps."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    steps = jax.random.randint(k1, (n, dim), -step, step + 1,
+                               dtype=jnp.int32)
+    restarts = jax.random.uniform(k2, (n,)) < restart_p
+    restart_pos = jax.random.randint(k3, (n, dim), 0, hi, dtype=jnp.int32)
+
+    def body(cur, x):
+        st, rs, rp = x
+        cur = jnp.where(rs, rp, jnp.clip(cur + st, 0, hi - 1))
+        return cur, cur
+
+    init = restart_pos[0]
+    _, pts = jax.lax.scan(body, init, (steps, restarts, restart_pos))
+    return pts
+
+
+GENERATORS = {"uniform": uniform, "sweepline": sweepline, "varden": varden}
+
+
+def batches(seed: int, dist: str, n_total: int, batch: int, dim: int = 2,
+            hi: int = DEFAULT_HI):
+    """Deterministic batch stream for incremental-update workloads.
+
+    For sweepline/varden the *stream itself* carries the skew (the paper
+    feeds batches in stream order), so we generate one sequence and slice.
+    """
+    key = jax.random.PRNGKey(seed)
+    pts = GENERATORS[dist](key, n_total, dim, hi)
+    for s in range(0, n_total, batch):
+        yield pts[s: s + batch]
+
+
+def query_boxes(key, n: int, dim: int, side: int, hi: int = DEFAULT_HI):
+    """Axis-aligned query boxes with ~side extent (range queries)."""
+    k1, k2 = jax.random.split(key)
+    lo = jax.random.randint(k1, (n, dim), 0, hi - side, dtype=jnp.int32)
+    ext = jax.random.randint(k2, (n, dim), side // 2, side + 1,
+                             dtype=jnp.int32)
+    return lo, lo + ext

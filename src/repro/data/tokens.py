@@ -1,0 +1,30 @@
+"""Deterministic synthetic token pipeline for the LM substrate.
+
+Every batch is a pure function of (seed, step) — restart-safe: a job resumed
+from step k regenerates batch k exactly (no data-loader state to checkpoint).
+Per-shard slicing happens *inside* jit via the batch sharding, so hosts never
+materialize the global batch.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "seq", "vocab"))
+def lm_batch(seed, step, batch: int, seq: int, vocab: int):
+    """(tokens, labels) for a causal-LM step; labels are tokens shifted."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    toks = jax.random.randint(key, (batch, seq + 1), 0, vocab,
+                              dtype=jnp.int32)
+    return toks[:, :-1], toks[:, 1:]
+
+
+@functools.partial(jax.jit, static_argnames=("batch", "seq", "dim"))
+def embedding_batch(seed, step, batch: int, seq: int, dim: int):
+    """Precomputed frame/patch embeddings for audio/VLM frontend stubs."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    return jax.random.normal(key, (batch, seq, dim), dtype=jnp.float32)

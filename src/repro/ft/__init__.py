@@ -1,0 +1,2 @@
+from .runtime import (FaultTolerantLoop, HeartbeatMonitor,  # noqa: F401
+                      Snapshotter, StragglerTracker)

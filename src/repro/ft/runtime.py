@@ -1,0 +1,156 @@
+"""Fault-tolerance runtime: heartbeats, stragglers, snapshot rollback.
+
+These are the *control-plane* pieces of a 1000-node job. The data plane
+(collectives) is XLA's; what a framework owns is: detecting that a step
+stopped making progress, deciding whether to roll back or re-mesh, and
+making either cheap. Everything here is host-side Python and runs the
+same on 1 CPU as on 2048 TPU hosts (per-host singleton objects).
+
+  * HeartbeatMonitor — workers stamp a heartbeat each step; the monitor
+    flags hosts whose stamp is older than `timeout`. On TPU pods the
+    stamps live in a shared store (etcd/GCS); here an injectable clock +
+    dict makes the policy unit-testable.
+  * StragglerTracker — robust step-time stats (median + MAD); a host
+    slower than median + k*MAD for `patience` consecutive steps is a
+    straggler. Policy hook returns "warn" | "rebalance" | "evict";
+    evict feeds the elastic re-mesh path (ckpt.restore onto the smaller
+    mesh — tests/test_ckpt.py::test_elastic_reshard).
+  * Snapshotter — in-memory rolling (step, state) snapshots on host RAM:
+    rollback for loss spikes / silent data corruption without touching
+    disk. Complements ckpt.async_save (disk, for process death).
+  * FaultTolerantLoop — composes the three around a train_step callable:
+    run() executes steps, triggers periodic async checkpoints, retries a
+    step after simulated failures, and rolls back on divergence.
+"""
+
+from __future__ import annotations
+
+import collections
+import time
+from typing import Callable, Optional
+
+import jax
+
+from repro import ckpt
+
+
+class HeartbeatMonitor:
+    def __init__(self, hosts, timeout: float = 60.0, clock=time.monotonic):
+        self.timeout = timeout
+        self.clock = clock
+        self.last = {h: clock() for h in hosts}
+
+    def beat(self, host):
+        self.last[host] = self.clock()
+
+    def dead_hosts(self):
+        now = self.clock()
+        return [h for h, t in self.last.items() if now - t > self.timeout]
+
+
+class StragglerTracker:
+    def __init__(self, k: float = 4.0, patience: int = 3, window: int = 64):
+        self.k = k
+        self.patience = patience
+        self.times: dict[object, collections.deque] = {}
+        self.strikes: dict[object, int] = {}
+        self.window = window
+
+    def record(self, host, step_time: float):
+        self.times.setdefault(
+            host, collections.deque(maxlen=self.window)).append(step_time)
+
+    def _stats(self):
+        all_t = sorted(t for d in self.times.values() for t in d)
+        if not all_t:
+            return 0.0, 0.0
+        med = all_t[len(all_t) // 2]
+        mad = sorted(abs(t - med) for t in all_t)[len(all_t) // 2]
+        return med, mad
+
+    def stragglers(self):
+        med, mad = self._stats()
+        out = []
+        for host, d in self.times.items():
+            if d and d[-1] > med + self.k * max(mad, 1e-9):
+                self.strikes[host] = self.strikes.get(host, 0) + 1
+                if self.strikes[host] >= self.patience:
+                    out.append(host)
+            else:
+                self.strikes[host] = 0
+        return out
+
+
+class Snapshotter:
+    """Rolling in-memory snapshots (host RAM) for cheap rollback."""
+
+    def __init__(self, keep: int = 2):
+        self.keep = keep
+        self.snaps: collections.deque = collections.deque(maxlen=keep)
+
+    def snap(self, step: int, state):
+        host_state = jax.tree.map(lambda x: jax.device_get(x), state)
+        self.snaps.append((step, host_state))
+
+    def rollback(self, shardings=None):
+        if not self.snaps:
+            raise RuntimeError("no snapshot to roll back to")
+        step, host_state = self.snaps[-1]
+        put = (lambda x, s: jax.device_put(x, s)) if shardings is not None \
+            else (lambda x, s: jax.numpy.asarray(x))
+        state = (jax.tree.map(put, host_state, shardings)
+                 if shardings is not None
+                 else jax.tree.map(lambda x: jax.numpy.asarray(x),
+                                   host_state))
+        return step, state
+
+
+class FaultTolerantLoop:
+    """Drives train_step with checkpoint/restart + rollback policies."""
+
+    def __init__(self, train_step: Callable, ckpt_dir: Optional[str] = None,
+                 ckpt_every: int = 50, snap_every: int = 10,
+                 max_retries: int = 2, loss_spike: float = 10.0):
+        self.train_step = train_step
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.snap_every = snap_every
+        self.max_retries = max_retries
+        self.loss_spike = loss_spike
+        self.snapshotter = Snapshotter()
+        self.rollbacks = 0
+        self.retries = 0
+
+    def run(self, state, batches, start_step: int = 0,
+            fail_hook: Optional[Callable] = None):
+        """state = (params, opt_state). batches: iterable of (step, batch).
+        fail_hook(step) may raise to simulate a node failure."""
+        params, opt = state
+        last_loss = None
+        for step, batch in batches:
+            if step < start_step:
+                continue
+            if step % self.snap_every == 0:
+                self.snapshotter.snap(step, (params, opt))
+            for attempt in range(self.max_retries + 1):
+                try:
+                    if fail_hook is not None:
+                        fail_hook(step)
+                    params2, opt2, metrics = self.train_step(params, opt,
+                                                             batch)
+                    break
+                except RuntimeError:
+                    self.retries += 1
+                    if attempt == self.max_retries:
+                        raise
+            loss = float(metrics["loss"])
+            if last_loss is not None and loss > last_loss * self.loss_spike:
+                _, (params, opt) = self.snapshotter.rollback()
+                self.rollbacks += 1
+                continue
+            params, opt, last_loss = params2, opt2, loss
+            if self.ckpt_dir and step % self.ckpt_every == 0:
+                ckpt.async_save({"params": params, "opt": opt},
+                                self.ckpt_dir, step)
+        ckpt.wait_pending()
+        return params, opt

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+Each subpackage: kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd wrapper with platform dispatch), ref.py (pure-jnp oracle).
+Validated in interpret mode on CPU; TPU is the compile target.
+
+  * sieve      — the paper's hot loop: fused bucket-id + histogram
+  * morton     — fused quantize + bit-interleave encode
+  * knn        — tiled distance matmul + running top-k
+  * bbox       — masked per-row min/max reduction
+  * flash_attn — block online-softmax attention (LM substrate)
+"""
+
+from . import bbox, flash_attn, knn, morton, sieve  # noqa: F401

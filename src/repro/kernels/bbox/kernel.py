@@ -1,0 +1,42 @@
+"""Pallas segment-bbox kernel: masked per-row min/max reduction.
+
+Maintaining bounding boxes is the R-tree's per-update obligation (paper
+Sec. 2.3); rows are (R, C, D) leaf slots. TPU mapping: tile rows into VMEM,
+reduce over the slot axis with masked min/max (VPU), one pass over HBM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bbox_kernel(pts_ref, valid_ref, lo_ref, hi_ref, *, big: float):
+    pts = pts_ref[...].astype(jnp.float32)     # (Br, C, D)
+    m = valid_ref[...][..., None]              # (Br, C, 1)
+    lo_ref[...] = jnp.min(jnp.where(m, pts, big), axis=1)
+    hi_ref[...] = jnp.max(jnp.where(m, pts, -big), axis=1)
+
+
+def row_bbox_pallas(pts, valid, *, block_r: int = 256,
+                    interpret: bool = False):
+    """pts (R, C, D), valid (R, C) -> (lo, hi) each (R, D) float32."""
+    R, C, dim = pts.shape
+    block_r = min(block_r, R)
+    grid = ((R + block_r - 1) // block_r,)
+    big = 3.4e38
+    kernel = functools.partial(_bbox_kernel, big=big)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_r, C, dim), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((block_r, C), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((block_r, dim), lambda i: (i, 0)),
+                   pl.BlockSpec((block_r, dim), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((R, dim), jnp.float32),
+                   jax.ShapeDtypeStruct((R, dim), jnp.float32)],
+        interpret=interpret,
+    )(pts, valid)

@@ -1,0 +1,19 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import row_bbox_pallas
+from .ref import row_bbox_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "impl"))
+def row_bbox(pts, valid, *, block_r: int = 256, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return row_bbox_pallas(pts, valid, block_r=block_r)
+    if impl == "interpret":
+        return row_bbox_pallas(pts, valid, block_r=block_r, interpret=True)
+    return row_bbox_ref(pts, valid)

@@ -1,0 +1,11 @@
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def row_bbox_ref(pts, valid):
+    p = pts.astype(jnp.float32)
+    m = valid[..., None]
+    big = 3.4e38
+    return (jnp.min(jnp.where(m, p, big), axis=1),
+            jnp.max(jnp.where(m, p, -big), axis=1))

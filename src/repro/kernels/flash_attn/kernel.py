@@ -1,0 +1,124 @@
+"""Pallas TPU flash attention (block online-softmax), causal + GQA + SWA.
+
+Used by the LM substrate (the serving/training hot spot). TPU-native tiling:
+  * grid = (batch, q_heads, num_q_blocks, num_kv_blocks) — the last axis
+    iterates fastest; VMEM scratch (m, l, acc) persists across kv blocks of
+    the same q block (the standard TPU flash pattern);
+  * q/k/v blocks live in VMEM via BlockSpec; MXU matmuls are (Bq, d)x(d, Bk)
+    with Bq/Bk multiples of 128 on real hardware (tests use smaller tiles in
+    interpret mode — the ref oracle is exact at any tile size);
+  * GQA: the k/v index_map folds q-head -> kv-head (h // group);
+  * causal + sliding-window masks are applied in-block (out-of-range kv
+    blocks contribute nothing; with causal=True whole blocks above the
+    diagonal are skipped via a cheap mask — grid pruning is a TODO noted in
+    EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, window: int | None,
+                 block_q: int, block_k: int, seq_q: int, seq_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (Bq, d)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (Bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)                  # (Bk, d)
+    # zero padded kv rows (partial tail blocks): 0 * NaN would poison p @ v
+    kv_valid = (ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_k,), 0)) < seq_kv
+    k = jnp.where(kv_valid[:, None], k, 0.0)
+    v = jnp.where(kv_valid[:, None], v, 0.0)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Bq, Bk)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    # queries index the *suffix* of the kv sequence (decode: q at the end)
+    q_pos = q_pos + (seq_kv - seq_q)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < seq_kv
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    # fully-masked rows: keep contributions at exactly zero
+    p = jnp.where(mask, p, 0.0)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_cur
+
+    @pl.when(ki == pl.num_programs(3) - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = False):
+    """q: (B, Hq, Sq, d), k/v: (B, Hkv, Skv, d) -> (B, Hq, Sq, d).
+
+    Sq may be shorter than Skv (decode: queries attend to a cache suffix
+    alignment — query i sits at absolute position Skv - Sq + i).
+    """
+    B, Hq, Sq, d = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0
+    group = Hq // Hkv
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    nq = (Sq + block_q - 1) // block_q
+    nk = (Skv + block_k - 1) // block_k
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, seq_q=Sq, seq_kv=Skv)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

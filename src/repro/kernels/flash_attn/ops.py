@@ -1,0 +1,31 @@
+"""Jit'd dispatch wrapper: Pallas kernel on TPU, oracle elsewhere.
+
+Model code calls ``attention(...)``; the dry-run (XLA:CPU, 512 fake devices)
+lowers the pure-jnp path, real-TPU runs hit the kernel, and tests pin
+``impl=`` explicitly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import flash_attention
+from .ref import attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "impl",
+                                             "block_q", "block_k"))
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              impl: str = "auto", block_q: int = 128, block_k: int = 128):
+    if impl == "auto":
+        impl = ("pallas" if jax.default_backend() == "tpu" else "ref")
+    if impl == "pallas":
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k)
+    if impl == "interpret":
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=True)
+    return attention_ref(q, k, v, causal=causal, window=window)

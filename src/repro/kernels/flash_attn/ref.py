@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for flash attention (exact softmax, f32 accumulation)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None):
+    """q: (B, Hq, Sq, d), k/v: (B, Hkv, Skv, d) -> (B, Hq, Sq, d)."""
+    B, Hq, Sq, d = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (d ** 0.5)
+    q_pos = jnp.arange(Sq)[:, None] + (Skv - Sq)
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (k_pos > q_pos - window)
+    s = jnp.where(mask, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    e = jnp.exp(s - m)
+    p = e / jnp.maximum(jnp.sum(e, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,23 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import knn_pallas
+from .ref import knn_ref
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_p",
+                                             "impl"))
+def knn_bruteforce(queries, points, ok, *, k: int, block_q: int = 128,
+                   block_p: int = 512, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return knn_pallas(queries, points, ok, k=k, block_q=block_q,
+                          block_p=block_p)
+    if impl == "interpret":
+        return knn_pallas(queries, points, ok, k=k, block_q=block_q,
+                          block_p=block_p, interpret=True)
+    return knn_ref(queries, points, ok, k=k)

@@ -1,0 +1,19 @@
+"""Oracle: exact brute-force kNN in pure jnp (f32)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BIG = 3.4e38
+
+
+def knn_ref(queries, points, ok, *, k: int):
+    q = queries.astype(jnp.float32)
+    p = points.astype(jnp.float32)
+    d2 = jnp.sum((q[:, None, :] - p[None, :, :]) ** 2, axis=-1)
+    d2 = jnp.where(ok[None, :], d2, BIG)
+    neg, idx = jax.lax.top_k(-d2, k)
+    d2k = -neg
+    idx = jnp.where(d2k >= BIG, -1, idx)
+    return d2k, idx

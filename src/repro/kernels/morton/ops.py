@@ -1,0 +1,21 @@
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import morton_encode_pallas
+from .ref import morton_encode_ref
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "coord_bits", "impl"))
+def morton_encode(pts, *, bits: int = 15, coord_bits: int = 20,
+                  impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "pallas":
+        return morton_encode_pallas(pts, bits=bits, coord_bits=coord_bits)
+    if impl == "interpret":
+        return morton_encode_pallas(pts, bits=bits, coord_bits=coord_bits,
+                                    interpret=True)
+    return morton_encode_ref(pts, bits=bits, coord_bits=coord_bits)

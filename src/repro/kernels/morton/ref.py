@@ -1,0 +1,12 @@
+"""Oracle: quantize + Morton encode via the core sfc module."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core import sfc
+
+
+def morton_encode_ref(pts, *, bits: int, coord_bits: int):
+    shift = max(0, coord_bits - bits)
+    return sfc.morton_encode(pts.astype(jnp.uint32) >> shift, bits)

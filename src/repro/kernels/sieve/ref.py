@@ -1,0 +1,33 @@
+"""Oracle: bucket-id + per-block histogram in pure jnp."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def bucket_ids_ref(pts, cell_lo, cell_hi, *, lam: int):
+    lo, hi = cell_lo, cell_hi
+    dim = pts.shape[1]
+    bucket = jnp.zeros(pts.shape[0], jnp.int32)
+    for _ in range(lam):
+        if jnp.issubdtype(pts.dtype, jnp.floating):
+            mid = lo + (hi - lo) * 0.5
+        else:
+            mid = lo + (hi - lo) // 2
+        gt = pts >= mid
+        b = jnp.zeros(pts.shape[0], jnp.int32)
+        for d in range(dim):
+            b = b | (gt[:, d].astype(jnp.int32) << (dim - 1 - d))
+        bucket = (bucket << dim) | b
+        lo = jnp.where(gt, mid, lo)
+        hi = jnp.where(gt, hi, mid)
+    return bucket
+
+
+def sieve_histogram_ref(pts, cell_lo, cell_hi, *, lam: int, block_n: int):
+    n, dim = pts.shape
+    n_buckets = 2 ** (lam * dim)
+    nb = (n + block_n - 1) // block_n
+    bucket = bucket_ids_ref(pts, cell_lo, cell_hi, lam=lam)
+    blk = jnp.arange(n) // block_n
+    return jnp.zeros((nb, n_buckets), jnp.int32).at[blk, bucket].add(1)

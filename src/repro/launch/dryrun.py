@@ -1,0 +1,363 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST run before any jax-touching import: jax locks
+# the device count at first init, and the production meshes need 512
+# placeholder host devices. Never set this globally — smoke tests and
+# benchmarks see the real single device.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver builds the *real* jitted program (train_step
+or serve prefill/decode step) with production in/out shardings over
+ShapeDtypeStruct stand-ins — no arrays are ever allocated — then:
+
+    lowered  = jax.jit(fn, in_shardings=..., out_shardings=...,
+                       donate_argnums=...).lower(*specs)
+    compiled = lowered.compile()
+    compiled.memory_analysis()   # proves it fits per-device HBM
+    compiled.cost_analysis()     # per-device FLOPs/bytes for §Roofline
+
+plus a post-SPMD HLO pass summing collective operand bytes
+(launch.roofline). Failures here (sharding mismatch, OOM at compile,
+unsupported collective) are bugs in the framework, not in the run.
+
+Usage:
+  python -m repro.launch.dryrun --arch all --mesh both --out results/
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k \
+      --set attn_causal_prune=False        # baseline A/B for §Perf
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro import configs
+from repro.launch import hlo_analysis, roofline
+from repro.launch.mesh import make_production_mesh
+from repro.models import encdec, transformer
+from repro.models.config import SHAPES, ModelCfg
+from repro.optim.adamw import adamw_init
+from repro.sharding import rules
+from repro.train.step import TrainCfg, make_train_step
+
+# Per-arch training knobs: microbatching bounds the remat-boundary
+# activations (G x B x S x D per device); bf16 moments are required to
+# fit 398B-class optimizer state on one pod (EXPERIMENTS.md §Dry-run).
+TRAIN_OVERRIDES: dict[str, dict] = {
+    # microbatch counts assume the SP (sequence-parallel) scan-carry
+    # boundary: remat saves are S/tp per device, so far fewer
+    # microbatches fit — which divides the per-microbatch gradient
+    # reduce traffic (EXPERIMENTS.md §Perf). jamba keeps bf16
+    # moments/accum: 398B f32 state cannot fit one pod.
+    "jamba-1.5-large-398b": dict(n_microbatch=2, moment_dtype="bfloat16",
+                                 accum_dtype="bfloat16"),
+    "qwen3-moe-235b-a22b": dict(n_microbatch=4),
+    "phi3.5-moe-42b-a6.6b": dict(n_microbatch=2),
+    "command-r-35b": dict(n_microbatch=2),
+    "internvl2-26b": dict(n_microbatch=2),
+}
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _rep(mesh):
+    return NamedSharding(mesh, P())
+
+
+def batch_specs(cfg: ModelCfg, shape, dtype="int32"):
+    """ShapeDtypeStructs + PartitionSpecs for one training batch."""
+    import jax.numpy as jnp
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.kind == "encdec":
+        Se = Sd = S // 2
+        sds = dict(prefix=_sds((B, Se, cfg.frontend_dim), jnp.float32),
+                   tokens=_sds((B, Sd), jnp.int32),
+                   labels=_sds((B, Sd), jnp.int32))
+    elif cfg.frontend is not None:
+        Pn = cfg.frontend_seq
+        sds = dict(prefix=_sds((B, Pn, cfg.frontend_dim), jnp.float32),
+                   tokens=_sds((B, S - Pn), jnp.int32),
+                   labels=_sds((B, S - Pn), jnp.int32))
+    else:
+        sds = dict(tokens=_sds((B, S), jnp.int32),
+                   labels=_sds((B, S), jnp.int32))
+    return sds
+
+
+# ----------------------------------------------------------- cell build
+
+def build_train(cfg: ModelCfg, shape, mesh):
+    tcfg = TrainCfg(**TRAIN_OVERRIDES.get(cfg.name, {}))
+    step = make_train_step(cfg, tcfg)
+
+    init = (encdec.init_params if cfg.kind == "encdec"
+            else transformer.init_params)
+    params_sds = jax.eval_shape(lambda: init(jax.random.PRNGKey(0), cfg))
+    import jax.numpy as jnp
+    opt_sds = jax.eval_shape(
+        lambda: adamw_init(params_sds, jnp.dtype(tcfg.moment_dtype)))
+    bsds = batch_specs(cfg, shape)
+
+    pspecs = rules.param_specs(cfg, mesh)
+    zspecs = rules.zero1_specs(pspecs, params_sds, mesh)
+    ospecs = {"m": zspecs, "v": zspecs, "step": P()}
+    dspecs = rules.data_specs(mesh, shape.global_batch)
+    bspecs = {k: dspecs[k] for k in bsds}
+
+    ps, osh, bs = (_shardings(mesh, t) for t in (pspecs, ospecs, bspecs))
+    mets = {"lr": _rep(mesh), "grad_norm": _rep(mesh), "loss": _rep(mesh)}
+    fn = jax.jit(step, in_shardings=(ps, osh, bs),
+                 out_shardings=(ps, osh, mets), donate_argnums=(0, 1))
+    n_tokens = shape.global_batch * shape.seq_len
+    return fn, (params_sds, opt_sds, bsds), n_tokens
+
+
+def build_prefill(cfg: ModelCfg, shape, mesh):
+    import jax.numpy as jnp
+    B, S = shape.global_batch, shape.seq_len
+    pspecs = rules.param_specs(cfg, mesh, mode="serve")
+    ps = _shardings(mesh, pspecs)
+    dspecs = rules.data_specs(mesh, B)
+    dp = dspecs["tokens"]
+
+    init = (encdec.init_params if cfg.kind == "encdec"
+            else transformer.init_params)
+    params_sds = jax.eval_shape(lambda: init(jax.random.PRNGKey(0), cfg))
+
+    if cfg.kind == "encdec":
+        Se = Sd = S // 2
+        frames = _sds((B, Se, cfg.frontend_dim), jnp.float32)
+        toks = _sds((B, Sd), jnp.int32)
+
+        def fn(params, frames, tokens):
+            return encdec.prefill(params, frames, tokens, cfg, max_len=Sd)
+
+        cspec = rules.encdec_cache_specs(cfg, mesh, B)
+        inp_sds = (params_sds, frames, toks)
+        inp_sh = (ps, _shardings(mesh, dspecs["prefix"]),
+                  _shardings(mesh, dp))
+    else:
+        Pn = cfg.frontend_seq if cfg.frontend is not None else 0
+        toks = _sds((B, S - Pn), jnp.int32)
+        pre = (_sds((B, Pn, cfg.frontend_dim), jnp.float32)
+               if Pn else None)
+
+        def fn(params, tokens, prefix=None):
+            return transformer.prefill(params, tokens, cfg, max_len=S,
+                                       prefix_embed=prefix)
+
+        cspec = rules.cache_specs(cfg, mesh, B)
+        if Pn:
+            inp_sds = (params_sds, toks, pre)
+            inp_sh = (ps, _shardings(mesh, dp),
+                      _shardings(mesh, dspecs["prefix"]))
+        else:
+            inp_sds = (params_sds, toks)
+            inp_sh = (ps, _shardings(mesh, dp))
+
+    vax = rules.TP if cfg.vocab % mesh.shape[rules.TP] == 0 else None
+    logits_sh = _shardings(mesh, P(rules.batch_axes(mesh) or None, None,
+                                   vax))
+    out_sh = (logits_sh, _shardings(mesh, cspec))
+    jfn = jax.jit(fn, in_shardings=inp_sh, out_shardings=out_sh)
+    n_tokens = B * S
+    return jfn, inp_sds, n_tokens
+
+
+def build_decode(cfg: ModelCfg, shape, mesh):
+    import jax.numpy as jnp
+    B, S = shape.global_batch, shape.seq_len
+    pspecs = rules.param_specs(cfg, mesh, mode="serve")
+    ps = _shardings(mesh, pspecs)
+    dspecs = rules.data_specs(mesh, B)
+    tok = _sds((B, 1), jnp.int32)
+
+    init = (encdec.init_params if cfg.kind == "encdec"
+            else transformer.init_params)
+    params_sds = jax.eval_shape(lambda: init(jax.random.PRNGKey(0), cfg))
+
+    if cfg.kind == "encdec":
+        cache_sds = jax.eval_shape(
+            lambda: encdec.init_cache(cfg, B, S, S // 2))
+        cspec = rules.encdec_cache_specs(cfg, mesh, B)
+
+        def fn(params, cache, tok):
+            return encdec.decode_step(params, cache, tok, cfg)
+    else:
+        cache_sds = jax.eval_shape(lambda: transformer.init_cache(cfg, B, S))
+        cspec = rules.cache_specs(cfg, mesh, B)
+
+        def fn(params, cache, tok):
+            return transformer.decode_step(params, cache, tok, cfg)
+
+    b_axes = rules.batch_axes(mesh)
+    n_dp = 1
+    for a in b_axes:
+        n_dp *= mesh.shape[a]
+    baxis = b_axes if B % n_dp == 0 else None
+    vax = rules.TP if cfg.vocab % mesh.shape[rules.TP] == 0 else None
+    logits_sh = _shardings(mesh, P(baxis, None, vax))
+    cs = _shardings(mesh, cspec)
+    jfn = jax.jit(fn, in_shardings=(ps, cs, _shardings(mesh,
+                                                       P(baxis, None))),
+                  out_shardings=(logits_sh, cs), donate_argnums=(1,))
+    return jfn, (params_sds, cache_sds, tok), B
+
+
+BUILDERS = {"train": build_train, "prefill": build_prefill,
+            "decode": build_decode}
+
+
+# ------------------------------------------------------------- run cell
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             overrides: dict | None = None, want_hlo: bool = False):
+    cfg = configs.ARCHS[arch]
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    # ambient mesh: activation sharding constraints in model code
+    # (sharding/constraints.py) resolve against it
+    jax.sharding.set_mesh(mesh)
+    rec = dict(arch=arch, shape=shape_name,
+               mesh="2x16x16" if multi_pod else "16x16",
+               mode=shape.mode, ok=False)
+    try:
+        fn, inp, n_tokens = BUILDERS[shape.mode](cfg, shape, mesh)
+        t0 = time.time()
+        lowered = fn.lower(*inp)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        rec.update(lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2))
+
+        ca = compiled.cost_analysis() or {}
+        rec["xla_cost"] = {k: float(v) for k, v in ca.items()
+                           if isinstance(v, (int, float))
+                           and k in ("flops", "bytes accessed")}
+
+        ma = compiled.memory_analysis()
+        mem = {}
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "peak_memory_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                mem[attr] = int(v)
+        rec["memory"] = mem
+
+        hlo = compiled.as_text()
+        res = hlo_analysis.analyze_text(hlo, detail=want_hlo)
+        flops, byts = res["flops"], res["bytes"]
+        rec["collectives"] = {k: res[k]
+                              for k in hlo_analysis.COLLECTIVE_OPS}
+        rec["collectives"]["total"] = res["collective_bytes"]
+        rec["hlo_lines"] = hlo.count("\n")
+
+        n_chips = mesh.size
+        ov = TRAIN_OVERRIDES.get(cfg.name, {})
+        mt = roofline.memory_traffic(
+            cfg, shape, n_chips, tp=mesh.shape["model"],
+            n_micro=ov.get("n_microbatch", 1),
+            moment_bytes=2 if ov.get("moment_dtype") == "bfloat16" else 4)
+        mf = roofline.model_flops(cfg, n_tokens, shape.mode)
+        rec["flops_per_dev"] = flops
+        rec["hlo_bytes_cpu_fusion"] = byts   # relative A/B diagnostic
+        rec["mem_traffic"] = {k: round(v) for k, v in mt.items()}
+        rec["model_flops_per_dev"] = mf / n_chips
+        rec["useful_frac"] = (mf / n_chips) / flops if flops else 0.0
+        rec["terms"] = roofline.terms(flops, mt["total"],
+                                      res["collective_bytes"])
+        rec["n_tokens"] = n_tokens
+        rec["ok"] = True
+        if want_hlo:
+            rec["detail"] = [
+                (k, b, n) for k, b, n in res.get("detail", [])[:40]]
+    except Exception as e:  # noqa: BLE001 — record, don't crash the sweep
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-3000:]
+    return rec
+
+
+def fmt_cell(rec: dict) -> str:
+    if not rec["ok"]:
+        return (f"FAIL {rec['arch']:26s} {rec['shape']:12s} {rec['mesh']:8s}"
+                f" {rec['error'][:90]}")
+    t = rec["terms"]
+    mem_gb = rec["memory"].get("argument_size_in_bytes", 0) / 2**30
+    return (f"ok   {rec['arch']:26s} {rec['shape']:12s} {rec['mesh']:8s} "
+            f"comp={t['compute_s']:9.3e} mem={t['memory_s']:9.3e} "
+            f"coll={t['collective_s']:9.3e} dom={t['bottleneck'][:-2]:10s} "
+            f"useful={rec['useful_frac']:6.1%} state={mem_gb:7.2f}GiB "
+            f"[lower {rec['lower_s']}s compile {rec['compile_s']}s]")
+
+
+def parse_set(kvs):
+    out = {}
+    for kv in kvs or []:
+        k, v = kv.split("=", 1)
+        if v in ("True", "False"):
+            v = v == "True"
+        else:
+            try:
+                v = int(v)
+            except ValueError:
+                try:
+                    v = float(v)
+                except ValueError:
+                    pass
+        out[k] = v
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--out", default=None, help="JSONL output path")
+    ap.add_argument("--set", action="append", dest="sets", metavar="K=V",
+                    help="ModelCfg field overrides (perf A/B)")
+    args = ap.parse_args()
+
+    archs = list(configs.ARCHS) if args.arch == "all" else [args.arch]
+    overrides = parse_set(args.sets)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    out_f = open(args.out, "a") if args.out else None
+    n_fail = 0
+    for arch in archs:
+        shapes = (configs.cells(arch) if args.shape == "all"
+                  else [args.shape])
+        for shape_name in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape_name, mp, overrides)
+                print(fmt_cell(rec), flush=True)
+                n_fail += 0 if rec["ok"] else 1
+                if out_f:
+                    rec.pop("traceback", None)
+                    out_f.write(json.dumps(rec) + "\n")
+                    out_f.flush()
+    if out_f:
+        out_f.close()
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Production meshes.
+
+Functions, not module constants: importing this module never touches
+jax device state (device count locks on first jax init — the dry-run
+must set XLA_FLAGS before anything else).
+
+Single pod: (16, 16) = ("data", "model") — 256 v5e chips.
+Multi-pod:  (2, 16, 16) = ("pod", "data", "model") — the "pod" axis is
+pure DP + ZeRO over DCN; all TP/EP/SP collectives stay inside a pod's
+ICI. At 1000+ nodes the pod axis simply grows (4, 8, ... pods): no
+code change, the axis is already rank-polymorphic in every spec.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests, examples)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))

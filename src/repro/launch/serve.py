@@ -1,0 +1,112 @@
+"""Serving launcher: the paper's dynamic-index service + LM serving.
+
+Two services behind one CLI:
+
+  * ``--service index`` — the paper's workload as a long-running
+    service: a dynamic spatial index absorbing batch updates while
+    answering kNN/range queries (the end-to-end driver for deliverable
+    (b); examples/dynamic_index_serving.py wraps this).
+  * ``--service lm`` — batched LM serving (prefill + greedy decode) on
+    a reduced config, exercising the same serve_step the dry-run lowers
+    at production shapes.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.serve --service index \
+      --n 100000 --batches 20 --queries 1000
+  PYTHONPATH=src python -m repro.launch.serve --service lm \
+      --arch qwen1.5-0.5b --batch 4 --new 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import queries as Q
+from repro.core import spac
+from repro.data import points as gen
+from repro.models import transformer
+from repro.serve import ServeEngine
+
+
+def serve_index(args):
+    key = jax.random.PRNGKey(args.seed)
+    n, m = args.n, args.n // args.batches
+    pts = gen.GENERATORS[args.dist](key, n, 2)
+    t0 = time.time()
+    tree = spac.build(pts[: n // 2], phi=32,
+                      capacity_rows=4 * (n // 32) + 64)
+    jax.block_until_ready(tree.pts)
+    t_build = time.time() - t0
+
+    qk = jax.random.split(key, 3)
+    qpts = gen.GENERATORS[args.dist](qk[0], args.queries, 2)
+    ins_t = del_t = qry_t = 0.0
+    served = 0
+    for b in range((n // 2) // m):
+        batch = pts[n // 2 + b * m: n // 2 + (b + 1) * m]
+        t0 = time.time()
+        tree = spac.insert(tree, batch)
+        jax.block_until_ready(tree.pts)
+        ins_t += time.time() - t0
+        assert not bool(tree.overflowed)
+
+        t0 = time.time()
+        d2, ids = Q.knn(tree.view(), qpts, args.k)
+        jax.block_until_ready(d2)
+        qry_t += time.time() - t0
+        served += args.queries
+
+        t0 = time.time()
+        tree = spac.delete(tree, batch[: m // 4])
+        jax.block_until_ready(tree.pts)
+        del_t += time.time() - t0
+
+    print(f"index service [{args.dist}] n={n}: build {t_build:.2f}s | "
+          f"insert {ins_t:.2f}s ({(n // 2) / ins_t:,.0f} pts/s) | "
+          f"delete {del_t:.2f}s | {served} kNN in {qry_t:.2f}s "
+          f"({served / qry_t:,.0f} q/s)")
+
+
+def serve_lm(args):
+    cfg = configs.smoke(args.arch).with_(act_dtype="float32")
+    params = transformer.init_params(jax.random.PRNGKey(args.seed), cfg)
+    engine = ServeEngine(cfg, params, max_len=args.prompt + args.new)
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (args.batch, args.prompt), 0, cfg.vocab,
+        dtype=jnp.int32)
+    t0 = time.time()
+    out = engine.generate(prompts, args.new)
+    jax.block_until_ready(out)
+    dt = time.time() - t0
+    print(f"lm serving [{cfg.name}]: batch={args.batch} prompt={args.prompt}"
+          f" +{args.new} new -> {out.shape}, "
+          f"{args.batch * args.new / dt:,.1f} tok/s")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--service", choices=["index", "lm"], default="index")
+    ap.add_argument("--seed", type=int, default=0)
+    # index service
+    ap.add_argument("--n", type=int, default=100_000)
+    ap.add_argument("--batches", type=int, default=10)
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--dist", default="uniform",
+                    choices=list(gen.GENERATORS))
+    # lm service
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt", type=int, default=32)
+    ap.add_argument("--new", type=int, default=16)
+    args = ap.parse_args(argv)
+    (serve_index if args.service == "index" else serve_lm)(args)
+
+
+if __name__ == "__main__":
+    main()

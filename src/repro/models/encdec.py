@@ -1,0 +1,198 @@
+"""Encoder-decoder assembly (seamless-m4t style).
+
+Encoder: cfg.encoder_layers bidirectional attention layers over
+precomputed modality-frontend embeddings (the assignment stubs the
+speech frontend — ``input_specs()`` supplies frame embeddings).
+Decoder: cfg.n_layers causal layers, each = self-attention +
+cross-attention (over the encoder memory) + SwiGLU.
+
+Both stacks use the same stacked-group lax.scan layout as
+models/transformer.py. Decode caches the decoder self-attention kv AND
+the cross-attention projections of the (static) encoder memory.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .config import ModelCfg
+
+
+# ---------------------------------------------------------------- params
+
+def init_params(key, cfg: ModelCfg):
+    dtype = jnp.dtype(cfg.act_dtype)
+    ke, kd, kx, kemb, kfront = jax.random.split(key, 5)
+    D = cfg.d_model
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"attn": layers.init_attention(k1, cfg, dtype),
+                "ffn": layers.init_swiglu(k2, cfg, dtype)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"attn": layers.init_attention(k1, cfg, dtype),
+                "xattn": layers.init_cross_attention(k2, cfg, dtype),
+                "ffn": layers.init_swiglu(k3, cfg, dtype)}
+
+    return {
+        "embed": jax.random.normal(kemb, (cfg.vocab, D), dtype) * D ** -0.5,
+        "adapter": {
+            "w": jax.random.normal(kfront, (cfg.frontend_dim, D), dtype)
+            * cfg.frontend_dim ** -0.5,
+            "b": jnp.zeros((D,), dtype),
+        },
+        "encoder": jax.vmap(enc_layer)(
+            jax.random.split(ke, cfg.encoder_layers)),
+        "enc_ln": jnp.ones((D,), dtype),
+        "decoder": jax.vmap(dec_layer)(
+            jax.random.split(kd, cfg.n_layers)),
+        "final_ln": jnp.ones((D,), dtype),
+    }
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# --------------------------------------------------------------- encoder
+
+def encode(params, frames, cfg: ModelCfg):
+    """frames: (B, S_enc, frontend_dim) -> memory (B, S_enc, D)."""
+    x = (frames.astype(params["embed"].dtype) @ params["adapter"]["w"]
+         + params["adapter"]["b"])
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(h, lp):
+        h, _ = layers.attention_block(h, lp["attn"], cfg, positions,
+                                      causal=False)
+        h = layers.swiglu_block(h, lp["ffn"], cfg)
+        return h, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return layers.rms_norm(x, params["enc_ln"], cfg.norm_eps)
+
+
+# --------------------------------------------------------------- decoder
+
+def _dec_body(x, lp, cfg, positions, memory=None, mem_kv=None,
+              cache=None, cache_len=None):
+    x, kv = layers.attention_block(x, lp["attn"], cfg, positions,
+                                   cache=cache, cache_len=cache_len)
+    x, xkv = layers.cross_attention_block(x, lp["xattn"], cfg,
+                                          memory=memory, mem_kv=mem_kv)
+    x = layers.swiglu_block(x, lp["ffn"], cfg)
+    return x, kv, xkv
+
+
+def decode_train(params, tokens, memory, cfg: ModelCfg):
+    """Teacher-forced decoder pass. tokens: (B, S_dec)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(h, lp):
+        h, _, _ = _dec_body(h, lp, cfg, positions, memory=memory)
+        return h, None
+
+    if cfg.remat != "none":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    return layers.rms_norm(x, params["final_ln"], cfg.norm_eps)
+
+
+def forward(params, frames, tokens, cfg: ModelCfg):
+    """Full enc-dec forward to logits (B, S_dec, V)."""
+    memory = encode(params, frames, cfg)
+    hidden = decode_train(params, tokens, memory, cfg)
+    return jnp.einsum("bsd,vd->bsv", hidden, params["embed"])
+
+
+def loss_fn(params, frames, tokens, labels, cfg: ModelCfg):
+    """Chunked CE like transformer.loss_fn (never (B,S,V))."""
+    memory = encode(params, frames, cfg)
+    hidden = decode_train(params, tokens, memory, cfg)
+    B, S, D = hidden.shape
+    C = min(cfg.loss_chunk, S)
+    n = (S + C - 1) // C
+    pad = n * C - S
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = hidden.reshape(B, n, C, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, C).transpose(1, 0, 2)
+
+    def chunk(carry, xs):
+        h, lbl = xs
+        logits = jnp.einsum("bsd,vd->bsv", h,
+                            params["embed"]).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(lbl, 0)[..., None], axis=-1)[..., 0]
+        valid = lbl >= 0
+        tot, cnt = carry
+        return (tot + jnp.sum(jnp.where(valid, lse - tgt, 0.0)),
+                cnt + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(chunk, (jnp.float32(0), jnp.int32(0)),
+                                 (hc, lc))
+    return tot / jnp.maximum(cnt, 1)
+
+
+# --------------------------------------------------------------- serving
+
+def init_cache(cfg: ModelCfg, batch: int, max_len: int, mem_len: int,
+               dtype=None):
+    dtype = dtype or jnp.dtype(cfg.act_dtype)
+    L, Hq, Hkv, hd = cfg.n_layers, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        "len": jnp.zeros((), jnp.int32),
+        "self_k": jnp.zeros((L, batch, Hkv, max_len, hd), dtype),
+        "self_v": jnp.zeros((L, batch, Hkv, max_len, hd), dtype),
+        "mem_k": jnp.zeros((L, batch, Hq, mem_len, hd), dtype),
+        "mem_v": jnp.zeros((L, batch, Hq, mem_len, hd), dtype),
+    }
+
+
+def prefill(params, frames, tokens, cfg: ModelCfg, max_len: int):
+    """Encode frames, prime both caches with the decoder prompt."""
+    memory = encode(params, frames, cfg)
+    B = tokens.shape[0]
+    cache = init_cache(cfg, B, max_len, memory.shape[1])
+    return _forward_cached(params, cache, tokens, cfg, memory=memory)
+
+
+def decode_step(params, cache, tokens, cfg: ModelCfg):
+    return _forward_cached(params, cache, tokens, cfg, memory=None)
+
+
+def _forward_cached(params, cache, tokens, cfg: ModelCfg, memory=None):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B, S, _ = x.shape
+    L0 = cache["len"]
+    positions = jnp.broadcast_to(L0 + jnp.arange(S, dtype=jnp.int32),
+                                 (B, S))
+
+    def body(h, xs):
+        lp, sk, sv, mk, mv = xs
+        mem_kv = None if memory is not None else (mk, mv)
+        h, kv, xkv = _dec_body(h, lp, cfg, positions, memory=memory,
+                               mem_kv=mem_kv, cache=dict(k=sk, v=sv),
+                               cache_len=L0)
+        nk, nv = (xkv if memory is not None else (mk, mv))
+        return h, (kv["k"], kv["v"], nk, nv)
+
+    x, (sk, sv, mk, mv) = jax.lax.scan(
+        body, x, (params["decoder"], cache["self_k"], cache["self_v"],
+                  cache["mem_k"], cache["mem_v"]))
+    hidden = layers.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = jnp.einsum("bsd,vd->bsv", hidden[:, -1:], params["embed"])
+    new_cache = {"len": L0 + S, "self_k": sk, "self_v": sv,
+                 "mem_k": mk, "mem_v": mv}
+    return logits, new_cache

@@ -1,0 +1,135 @@
+"""RWKV6 "Finch" block: data-dependent-decay linear attention + channel mix.
+
+Time-mix state is (B, H, hd, hd) per layer (attention-free: O(1) per decoded
+token — why rwkv6 runs the long_500k cell natively). The sequential scan over
+tokens is exact; a chunked formulation is a §Perf candidate.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constraints as C
+
+from .layers import rms_norm
+
+
+def _token_shift(x, prev):
+    """x_{t-1} with prev as the t=0 predecessor. x: (B, S, D), prev: (B, D)."""
+    return jnp.concatenate([prev[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def time_mix(x, p, cfg, cache=None):
+    rw = cfg.rwkv
+    B, S, D = x.shape
+    hd = rw.head_dim
+    H = D // hd
+    r0 = rms_norm(x, p["ln"], cfg.norm_eps)
+    prev = (jnp.zeros((B, D), x.dtype) if cache is None
+            else cache["shift_t"])
+    sx = _token_shift(r0, prev) - r0
+
+    # data-dependent lerp (ddlerp) for the five projections
+    xxx = r0 + sx * p["mu_x"]
+    deltas = jnp.einsum(
+        "pbsl,pld->pbsd",
+        jnp.tanh(jnp.einsum("bsd,pdl->pbsl", xxx, p["mix_w1_p"])),
+        p["mix_w2"])
+    mw, mk, mv, mr, mg = deltas
+    xw = r0 + sx * (p["mu_w"] + mw)
+    xk = r0 + sx * (p["mu_k"] + mk)
+    xv = r0 + sx * (p["mu_v"] + mv)
+    xr = r0 + sx * (p["mu_r"] + mr)
+    xg = r0 + sx * (p["mu_g"] + mg)
+
+    r = jnp.einsum("bsd,de->bse", xr, p["Wr"]).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,de->bse", xk, p["Wk"]).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,de->bse", xv, p["Wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(jnp.einsum("bsd,de->bse", xg, p["Wg"]))
+    w = p["w0"] + jnp.einsum(
+        "bsl,ld->bsd", jnp.tanh(jnp.einsum("bsd,dl->bsl", xw, p["dw1"])),
+        p["dw2"])
+    w = jnp.exp(-jnp.exp(w.astype(jnp.float32))).reshape(B, S, H, hd)
+
+    state0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if cache is None
+              else cache["wkv"])
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp       # (B, H, hd) each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt.astype(jnp.float32),
+                        vt.astype(jnp.float32))
+        out = jnp.einsum("bhk,bhkv->bhv", rt.astype(jnp.float32),
+                         s + p["u"][None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, out
+
+    xs = (r.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), w.transpose(1, 0, 2, 3))
+    state, ys = jax.lax.scan(step, state0, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    # per-head group norm
+    yh = y.reshape(B, S, H, hd).astype(jnp.float32)
+    mu = jnp.mean(yh, -1, keepdims=True)
+    var = jnp.var(yh, -1, keepdims=True)
+    yh = ((yh - mu) * jax.lax.rsqrt(var + 64e-5)).reshape(B, S, D)
+    y = (yh.astype(x.dtype) * p["ln_x"]) * g.reshape(B, S, D)
+    out = C.bsd(jnp.einsum("bse,ed->bsd", y, p["Wo"]))
+    new_cache = None if cache is None else dict(
+        shift_t=r0[:, -1, :], wkv=state)
+    return x + out, new_cache
+
+
+def channel_mix(x, p, cfg, cache=None):
+    B, S, D = x.shape
+    r0 = rms_norm(x, p["ln"], cfg.norm_eps)
+    prev = (jnp.zeros((B, D), x.dtype) if cache is None
+            else cache["shift_c"])
+    sx = _token_shift(r0, prev) - r0
+    xk = r0 + sx * p["mu_ck"]
+    xr = r0 + sx * p["mu_cr"]
+    k = jnp.einsum("bsd,df->bsf", xk, p["Wck"])
+    k = jnp.square(jax.nn.relu(k))
+    v = jnp.einsum("bsf,fd->bsd", k, p["Wcv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["Wcr"]))
+    new_cache = None if cache is None else dict(shift_c=r0[:, -1, :])
+    return x + C.bsd(r * v), new_cache
+
+
+def rwkv_block(x, p, cfg, cache=None):
+    """Full RWKV6 layer = time mix + channel mix."""
+    x, c1 = time_mix(x, p, cfg, cache)
+    x, c2 = channel_mix(x, p, cfg, cache)
+    new_cache = None if cache is None else {**c1, **c2}
+    return x, new_cache
+
+
+def init_rwkv(key, cfg, dtype):
+    rw, D, F = cfg.rwkv, cfg.d_model, cfg.d_ff
+    hd = rw.head_dim
+    H = D // hd
+    L, M = rw.decay_lora, rw.mix_lora
+    ks = jax.random.split(key, 12)
+    std = D ** -0.5
+    return dict(
+        ln=jnp.ones((D,), dtype),
+        mu_x=jnp.zeros((D,), dtype), mu_w=jnp.zeros((D,), dtype),
+        mu_k=jnp.zeros((D,), dtype), mu_v=jnp.zeros((D,), dtype),
+        mu_r=jnp.zeros((D,), dtype), mu_g=jnp.zeros((D,), dtype),
+        mix_w1_p=jax.random.normal(ks[0], (5, D, M), dtype) * std,
+        mix_w2=jax.random.normal(ks[1], (5, M, D), dtype) * M ** -0.5,
+        Wr=jax.random.normal(ks[2], (D, D), dtype) * std,
+        Wk=jax.random.normal(ks[3], (D, D), dtype) * std,
+        Wv=jax.random.normal(ks[4], (D, D), dtype) * std,
+        Wg=jax.random.normal(ks[5], (D, D), dtype) * std,
+        Wo=jax.random.normal(ks[6], (D, D), dtype) * std,
+        w0=jnp.full((D,), -1.0, dtype),
+        dw1=jax.random.normal(ks[7], (D, L), dtype) * std,
+        dw2=jax.random.normal(ks[8], (L, D), dtype) * L ** -0.5,
+        u=jax.random.normal(ks[9], (H, hd), jnp.float32) * 0.1,
+        ln_x=jnp.ones((D,), dtype),
+        mu_ck=jnp.zeros((D,), dtype), mu_cr=jnp.zeros((D,), dtype),
+        Wck=jax.random.normal(ks[10], (D, F), dtype) * std,
+        Wcv=jax.random.normal(ks[11], (F, D), dtype) * F ** -0.5,
+        Wcr=jax.random.normal(ks[0], (D, D), dtype) * std,
+    )

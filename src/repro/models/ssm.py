@@ -1,0 +1,116 @@
+"""Mamba-1 selective-scan block (jamba's mixer), chunked associative scan.
+
+Training: the recurrence h_t = a_t * h_{t-1} + b_t is associative; we scan
+chunks sequentially (bounded memory) and use an associative scan inside a
+chunk (parallel depth log C). Decode: O(1) state update (conv tail + h).
+State shards with d_inner over the "model" axis (TP).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constraints as C
+
+from .layers import rms_norm
+
+SSM_CHUNK = 256
+
+
+def _selective_scan(a, b, h0):
+    """a, b: (B, S, di, ds) with h_t = a_t * h_{t-1} + b_t; h0: (B, di, ds).
+    Returns all h_t (B, S, di, ds) and final h."""
+    B, S, di, ds = a.shape
+    chunk = min(SSM_CHUNK, S)
+    n = (S + chunk - 1) // chunk
+    pad = n * chunk - S
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    a = a.reshape(B, n, chunk, di, ds).transpose(1, 0, 2, 3, 4)
+    b = b.reshape(B, n, chunk, di, ds).transpose(1, 0, 2, 3, 4)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    def per_chunk(h, ab):
+        ac, bc = ab
+        As, Bs = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        hs = As * h[:, None] + Bs
+        return hs[:, -1], hs
+
+    h_last, hs = jax.lax.scan(per_chunk, h0, (a, b))
+    hs = hs.transpose(1, 0, 2, 3, 4).reshape(B, n * chunk, di, ds)
+    return hs[:, :S], h_last
+
+
+def mamba_block(x, p, cfg, cache=None):
+    """x: (B, S, D). cache: None or dict(conv=(B, di, K-1), h=(B, di, ds))."""
+    ssm = cfg.ssm
+    B, S, D = x.shape
+    di = ssm.expand * D
+    ds, K = ssm.d_state, ssm.d_conv
+    dtr = ssm.dt_rank or max(1, D // 16)
+
+    r = rms_norm(x, p["ln"], cfg.norm_eps)
+    xz = C.constrain(jnp.einsum("bsd,de->bse", r, p["in_proj"]),
+                     C.batch_axes() or None, None, C.TP)
+    xi, z = jnp.split(xz, 2, axis=-1)              # (B, S, di)
+
+    # causal depthwise conv
+    xt = xi.transpose(0, 2, 1)                      # (B, di, S)
+    if cache is None:
+        tail = jnp.zeros((B, di, K - 1), xt.dtype)
+    else:
+        tail = cache["conv"]
+    xt_full = jnp.concatenate([tail, xt], axis=-1)
+    conv = sum(p["conv_w"][None, :, k: k + 1] * xt_full[:, :, k: k + S]
+               for k in range(K))
+    conv = conv + p["conv_b"][None, :, None]
+    new_tail = xt_full[:, :, -(K - 1):]
+    xc = jax.nn.silu(conv.transpose(0, 2, 1))       # (B, S, di)
+
+    proj = jnp.einsum("bse,ef->bsf", xc, p["x_proj"])
+    dt, Bm, Cm = jnp.split(proj, [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("bsr,re->bse", dt, p["dt_proj"])
+                         + p["dt_bias"])            # (B, S, di)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))    # (di, ds)
+    da = jnp.exp(dt[..., None].astype(jnp.float32) * A)       # (B,S,di,ds)
+    db = (dt[..., None] * Bm[:, :, None, :] * xc[..., None]
+          ).astype(jnp.float32)
+
+    h0 = (jnp.zeros((B, di, ds), jnp.float32) if cache is None
+          else cache["h"])
+    hs, h_last = _selective_scan(da, db, h0)
+    y = jnp.einsum("bsnk,bsk->bsn", hs, Cm.astype(jnp.float32))
+    y = (y + xc.astype(jnp.float32) * p["D_skip"]).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = C.bsd(jnp.einsum("bse,ed->bsd", y, p["out_proj"]))
+    new_cache = None if cache is None else dict(conv=new_tail, h=h_last)
+    return x + out, new_cache
+
+
+def init_mamba(key, cfg, dtype):
+    ssm, D = cfg.ssm, cfg.d_model
+    di = ssm.expand * D
+    ds, K = ssm.d_state, ssm.d_conv
+    dtr = ssm.dt_rank or max(1, D // 16)
+    ks = jax.random.split(key, 6)
+    return dict(
+        ln=jnp.ones((D,), dtype),
+        in_proj=jax.random.normal(ks[0], (D, 2 * di), dtype) * D ** -0.5,
+        conv_w=jax.random.normal(ks[1], (di, K), dtype) * K ** -0.5,
+        conv_b=jnp.zeros((di,), dtype),
+        x_proj=jax.random.normal(ks[2], (di, dtr + 2 * ds), dtype)
+        * di ** -0.5,
+        dt_proj=jax.random.normal(ks[3], (dtr, di), dtype) * dtr ** -0.5,
+        dt_bias=jnp.full((di,), -4.0, dtype),  # softplus(-4) ~ small dt
+        A_log=jnp.log(jnp.broadcast_to(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))),
+        D_skip=jnp.ones((di,), jnp.float32),
+        out_proj=jax.random.normal(ks[4], (di, D), dtype) * di ** -0.5,
+    )

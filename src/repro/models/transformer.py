@@ -1,0 +1,303 @@
+"""Decoder-LM assembly: pattern-grouped layers under lax.scan.
+
+A model is cfg.n_layers layers, cycling cfg.pattern ('a'=attention,
+'m'=mamba, 'r'=rwkv). Layers are grouped: one *group* = len(pattern)
+consecutive layers; parameters of group position j are stacked over the
+n_groups axis so the whole stack is one lax.scan (compile time and HLO
+size stay flat even for 94-layer models). Within a group the positions
+are unrolled statically, so heterogeneous mixers (jamba's 1:7
+mamba/attention interleave) cost nothing.
+
+Caches for serving share the same stacked layout; scan consumes the
+per-group cache slice as xs and emits the updated slice as ys.
+
+Ring-buffer KV caches (cfg.window set, capacity == window) make
+long-context decode O(window) per step — why h2o-danube runs the
+long_500k cell. See layers.attention_block for ring semantics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import constraints as C
+
+from . import layers, moe as moe_lib, rwkv as rwkv_lib, ssm as ssm_lib
+from .config import ModelCfg
+
+
+# ---------------------------------------------------------------- params
+
+def _init_pos(key, cfg: ModelCfg, j: int, dtype):
+    """Params for group position j (mixer + optional ffn)."""
+    t = cfg.layer_type(j)
+    km, kf = jax.random.split(key)
+    if t == "a":
+        p = {"mixer": layers.init_attention(km, cfg, dtype)}
+    elif t == "m":
+        p = {"mixer": ssm_lib.init_mamba(km, cfg, dtype)}
+    elif t == "r":
+        return {"mixer": rwkv_lib.init_rwkv(km, cfg, dtype)}
+    else:
+        raise ValueError(f"unknown layer type {t!r}")
+    if cfg.is_moe_layer(j):
+        p["ffn"] = moe_lib.init_moe(kf, cfg, dtype)
+    else:
+        p["ffn"] = layers.init_swiglu(kf, cfg, dtype)
+    return p
+
+
+def init_params(key, cfg: ModelCfg):
+    """Returns the model pytree; group-position leaves have a leading
+    (n_groups,) axis."""
+    dtype = jnp.dtype(cfg.act_dtype)
+    L = len(cfg.pattern)
+    if cfg.moe is not None:
+        assert L % cfg.moe.every == 0, \
+            "moe.every must divide the pattern length for scanned groups"
+    G = cfg.n_groups
+    k_embed, k_head, k_groups, k_front = jax.random.split(key, 4)
+
+    groups = {}
+    for j in range(L):
+        kj = jax.random.fold_in(k_groups, j)
+        groups[f"pos{j}"] = jax.vmap(
+            lambda k: _init_pos(k, cfg, j, dtype))(jax.random.split(kj, G))
+
+    params = {
+        "embed": jax.random.normal(
+            k_embed, (cfg.vocab, cfg.d_model), dtype) * cfg.d_model ** -0.5,
+        "final_ln": jnp.ones((cfg.d_model,), dtype),
+        "groups": groups,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = jax.random.normal(
+            k_head, (cfg.d_model, cfg.vocab), dtype) * cfg.d_model ** -0.5
+    if cfg.frontend is not None:
+        params["adapter"] = {
+            "w": jax.random.normal(k_front, (cfg.frontend_dim, cfg.d_model),
+                                   dtype) * cfg.frontend_dim ** -0.5,
+            "b": jnp.zeros((cfg.d_model,), dtype),
+        }
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# --------------------------------------------------------------- forward
+
+def _group_fn(x, gp, cfg: ModelCfg, positions):
+    """One group of len(pattern) layers, training mode (no caches)."""
+    x = C.bsd(x)          # re-gather the SP boundary (tiny AG)
+    for j, t in enumerate(cfg.pattern):
+        sub = gp[f"pos{j}"]
+        if t == "a":
+            x, _ = layers.attention_block(x, sub["mixer"], cfg, positions)
+        elif t == "m":
+            x, _ = ssm_lib.mamba_block(x, sub["mixer"], cfg)
+        else:
+            x, _ = rwkv_lib.rwkv_block(x, sub["mixer"], cfg)
+            continue
+        if cfg.is_moe_layer(j):
+            x = moe_lib.moe_block(x, sub["ffn"], cfg)
+        else:
+            x = layers.swiglu_block(x, sub["ffn"], cfg)
+    return C.sp_boundary(x)   # scan carry: S/tp per device (free slice)
+
+
+_REMAT_POLICIES = {
+    "dots": lambda: jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    "full": lambda: None,
+}
+
+
+def _maybe_remat(fn, cfg: ModelCfg):
+    if cfg.remat == "none":
+        return fn
+    policy = _REMAT_POLICIES[cfg.remat]()
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _embed_inputs(params, tokens, cfg: ModelCfg, prefix_embed):
+    x = C.bsd(jnp.take(params["embed"], tokens, axis=0))
+    if prefix_embed is not None:
+        pre = (prefix_embed.astype(x.dtype) @ params["adapter"]["w"]
+               + params["adapter"]["b"])
+        x = jnp.concatenate([pre, x], axis=1)
+    return x
+
+
+def forward_hidden(params, tokens, cfg: ModelCfg, prefix_embed=None):
+    """tokens: (B, S_tok) int32; prefix_embed: (B, P, frontend_dim) or
+    None. Returns final hidden states (B, P + S_tok, D)."""
+    x = _embed_inputs(params, tokens, cfg, prefix_embed)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    body = _maybe_remat(
+        lambda h, gp: (_group_fn(h, gp, cfg, positions), None), cfg)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["groups"])
+    else:
+        for g in range(cfg.n_groups):
+            gp = jax.tree.map(lambda a: a[g], params["groups"])
+            x, _ = body(x, gp)
+    return layers.rms_norm(x, params["final_ln"], cfg.norm_eps)
+
+
+def logits_fn(params, hidden, cfg: ModelCfg):
+    w = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+    return jnp.einsum("bsd,dv->bsv", hidden, w)
+
+
+def forward(params, tokens, cfg: ModelCfg, prefix_embed=None):
+    """Full-vocab logits — test/small-model path (materializes (B,S,V))."""
+    return logits_fn(params, forward_hidden(params, tokens, cfg,
+                                            prefix_embed), cfg)
+
+
+def loss_fn(params, tokens, labels, cfg: ModelCfg, prefix_embed=None):
+    """Mean CE over label positions; logits computed in seq chunks of
+    cfg.loss_chunk so (B, S, V) never materializes. labels: (B, S_tok),
+    -1 = ignore. Loss covers the token suffix only (prefix positions are
+    modality stubs)."""
+    hidden = forward_hidden(params, tokens, cfg, prefix_embed)
+    if prefix_embed is not None:
+        hidden = hidden[:, prefix_embed.shape[1]:]
+    B, S, D = hidden.shape
+    w = (params["embed"].T if cfg.tie_embeddings else params["unembed"])
+
+    C = min(cfg.loss_chunk, S)
+    n = (S + C - 1) // C
+    pad = n * C - S
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = hidden.reshape(B, n, C, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, C).transpose(1, 0, 2)
+
+    def chunk(carry, xs):
+        h, lbl = xs
+        logits = jnp.einsum("bsd,dv->bsv", h, w).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(lbl, 0)[..., None], axis=-1)[..., 0]
+        valid = lbl >= 0
+        nll = jnp.where(valid, lse - tgt, 0.0)
+        tot, cnt = carry
+        return (tot + jnp.sum(nll), cnt + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(chunk, (jnp.float32(0), jnp.int32(0)),
+                                 (hc, lc))
+    return tot / jnp.maximum(cnt, 1)
+
+
+# ---------------------------------------------------------------- caches
+
+def init_cache(cfg: ModelCfg, batch: int, max_len: int, dtype=None):
+    """Decode cache pytree. Attention caches hold W = min(max_len, window)
+    kv slots; ring layout iff windowed and window < max_len. Mamba/RWKV
+    states are O(1) per token (why those archs run long_500k)."""
+    dtype = dtype or jnp.dtype(cfg.act_dtype)
+    G, L = cfg.n_groups, len(cfg.pattern)
+    W = max_len if cfg.window is None else min(max_len, cfg.window)
+    ring = W < max_len
+    D = cfg.d_model
+    layers_c = {}
+    for j, t in enumerate(cfg.pattern):
+        if t == "a":
+            layers_c[f"pos{j}"] = dict(
+                k=jnp.zeros((G, batch, cfg.n_kv_heads, W, cfg.hd), dtype),
+                v=jnp.zeros((G, batch, cfg.n_kv_heads, W, cfg.hd), dtype))
+        elif t == "m":
+            di = cfg.ssm.expand * D
+            layers_c[f"pos{j}"] = dict(
+                conv=jnp.zeros((G, batch, di, cfg.ssm.d_conv - 1), dtype),
+                h=jnp.zeros((G, batch, di, cfg.ssm.d_state), jnp.float32))
+        else:
+            H = D // cfg.rwkv.head_dim
+            layers_c[f"pos{j}"] = dict(
+                shift_t=jnp.zeros((G, batch, D), dtype),
+                wkv=jnp.zeros((G, batch, H, cfg.rwkv.head_dim,
+                               cfg.rwkv.head_dim), jnp.float32),
+                shift_c=jnp.zeros((G, batch, D), dtype))
+    cache = {"len": jnp.zeros((), jnp.int32), "layers": layers_c}
+    if ring:
+        cache["pos"] = jnp.full((W,), -1, jnp.int32)
+    return cache
+
+
+def forward_with_cache(params, cache, tokens, cfg: ModelCfg,
+                       prefix_embed=None):
+    """Shared prefill/decode forward. Returns (hidden, new_cache)."""
+    x = _embed_inputs(params, tokens, cfg, prefix_embed)
+    B, S, _ = x.shape
+    L0 = cache["len"]
+    ring_pos = cache.get("pos")
+    positions = jnp.broadcast_to(L0 + jnp.arange(S, dtype=jnp.int32),
+                                 (B, S))
+
+    def body(x, xs):
+        gp, gc = xs
+        new_gc = {}
+        for j, t in enumerate(cfg.pattern):
+            sub, c = gp[f"pos{j}"], gc[f"pos{j}"]
+            if t == "a":
+                x, nc = layers.attention_block(
+                    x, sub["mixer"], cfg, positions, cache=c,
+                    cache_len=L0, cache_pos=ring_pos)
+            elif t == "m":
+                x, nc = ssm_lib.mamba_block(x, sub["mixer"], cfg, cache=c)
+            else:
+                x, nc = rwkv_lib.rwkv_block(x, sub["mixer"], cfg, cache=c)
+            new_gc[f"pos{j}"] = nc
+            if t != "r":
+                if cfg.is_moe_layer(j):
+                    x = moe_lib.moe_block(x, sub["ffn"], cfg)
+                else:
+                    x = layers.swiglu_block(x, sub["ffn"], cfg)
+        return x, new_gc
+
+    if cfg.scan_layers:
+        x, new_layers = jax.lax.scan(
+            body, x, (params["groups"], cache["layers"]))
+    else:
+        new_list = []
+        for g in range(cfg.n_groups):
+            sl = jax.tree.map(lambda a: a[g],
+                              (params["groups"], cache["layers"]))
+            x, ng = body(x, sl)
+            new_list.append(ng)
+        new_layers = jax.tree.map(lambda *xs: jnp.stack(xs), *new_list)
+
+    new_cache = {"len": L0 + S, "layers": new_layers}
+    if ring_pos is not None:
+        W = ring_pos.shape[0]
+        m = min(S, W)
+        slots = (L0 + S - m + jnp.arange(m, dtype=jnp.int32)) % W
+        new_cache["pos"] = ring_pos.at[slots].set(
+            L0 + S - m + jnp.arange(m, dtype=jnp.int32))
+    hidden = layers.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    return hidden, new_cache
+
+
+def prefill(params, tokens, cfg: ModelCfg, max_len: int,
+            prefix_embed=None):
+    """Run the prompt through the model, build the cache, return the
+    last-position logits (B, 1, V) + cache ready for decode_step."""
+    B = tokens.shape[0]
+    cache = init_cache(cfg, B, max_len)
+    hidden, cache = forward_with_cache(params, cache, tokens, cfg,
+                                       prefix_embed)
+    return logits_fn(params, hidden[:, -1:], cfg), cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelCfg):
+    """One decode step. tokens: (B, 1). Returns (logits (B,1,V), cache)."""
+    hidden, cache = forward_with_cache(params, cache, tokens, cfg)
+    return logits_fn(params, hidden, cfg), cache

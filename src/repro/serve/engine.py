@@ -1,0 +1,53 @@
+"""Batched serving engine: prefill + greedy decode over fixed slots.
+
+The engine owns jit'd prefill/decode_step closures for one (cfg,
+batch, max_len) signature — the serving hot path never retraces. A
+request batch is (prompts, n_new): prefill primes the cache for all
+slots at once, then decode steps run lock-step (the standard batched
+decode; slot-level continuous batching would swap finished slots —
+noted as future work, the cache layout already permits per-slot reset).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelCfg
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelCfg, params, max_len: int):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+
+        @jax.jit
+        def _prefill(params, tokens):
+            return transformer.prefill(params, tokens, cfg, max_len)
+
+        @jax.jit
+        def _step(params, cache, tok):
+            return transformer.decode_step(params, cache, tok, cfg)
+
+        self._prefill = _prefill
+        self._step = _step
+
+    def generate(self, prompts, n_new: int, greedy: bool = True, key=None):
+        """prompts: (B, P) int32. Returns (B, n_new) generated tokens."""
+        logits, cache = self._prefill(self.params, prompts)
+        out = []
+        for i in range(n_new):
+            if greedy:
+                tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+            else:
+                key, sub = jax.random.split(key)
+                tok = jax.random.categorical(sub, logits[:, -1])[:, None]
+            tok = tok.astype(jnp.int32)
+            out.append(tok)
+            if i + 1 < n_new:
+                logits, cache = self._step(self.params, cache, tok)
+        return jnp.concatenate(out, axis=1)

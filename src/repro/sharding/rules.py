@@ -1,0 +1,287 @@
+"""Partition rules: params / optimizer state / inputs / caches -> PartitionSpec.
+
+Spec trees are built by *mirroring the init_params structure* (not by
+name-matching leaf paths), so they are correct by construction for every
+arch in the zoo.
+
+Axis roles (DESIGN.md Sec. 5):
+  * batch    -> ("pod", "data")   pure DP; "pod" only exists multi-pod
+  * TP       -> "model"           attention heads, ffn hidden, vocab
+  * EP       -> "model"           experts (MoE layers)
+  * SP       -> "model"           kv-cache sequence dim for decode
+  * ZeRO-1   -> "data"            optimizer state, largest replicated dim
+
+Small tensors (norms, biases, routers, rwkv loras) replicate — sharding
+them buys nothing and costs collectives.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelCfg
+
+TP = "model"
+
+
+def _stack(tree):
+    """Prepend the group-stack axis (None) to every spec leaf."""
+    return jax.tree.map(
+        lambda s: P(*((None,) + tuple(s))), tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _divisible(n: int, mesh, axis: str) -> bool:
+    return axis in mesh.shape and n % mesh.shape[axis] == 0
+
+
+def spec_attention(cfg: ModelCfg, mesh):
+    kv = P(None, TP, None) if _divisible(cfg.n_kv_heads, mesh, TP) \
+        else P(None, None, None)
+    kvb = P(TP, None) if _divisible(cfg.n_kv_heads, mesh, TP) \
+        else P(None, None)
+    s = dict(ln=P(None), wq=P(None, TP, None), wk=kv, wv=kv,
+             wo=P(TP, None, None))
+    if cfg.qkv_bias:
+        s.update(bq=P(TP, None), bk=kvb, bv=kvb)
+    return s
+
+
+def spec_cross_attention(cfg: ModelCfg, mesh):
+    return dict(ln=P(None), wq=P(None, TP, None), wk=P(None, TP, None),
+                wv=P(None, TP, None), wo=P(TP, None, None))
+
+
+def spec_swiglu():
+    return dict(ln=P(None), w1=P(None, TP), w3=P(None, TP),
+                w2=P(TP, None))
+
+
+def spec_moe():
+    # experts over "model" = expert parallelism; router replicated
+    return dict(ln=P(None), wr=P(None, None), w1=P(TP, None, None),
+                w3=P(TP, None, None), w2=P(TP, None, None))
+
+
+def spec_mamba():
+    # d_inner over "model" (TP); tiny projections replicated
+    return dict(ln=P(None), in_proj=P(None, TP), conv_w=P(TP, None),
+                conv_b=P(TP), x_proj=P(TP, None), dt_proj=P(None, TP),
+                dt_bias=P(TP), A_log=P(TP, None), D_skip=P(TP),
+                out_proj=P(TP, None))
+
+
+def spec_rwkv(cfg: ModelCfg, mesh):
+    H = cfg.d_model // cfg.rwkv.head_dim
+    rep = P(None)
+    return dict(
+        ln=rep, mu_x=rep, mu_w=rep, mu_k=rep, mu_v=rep, mu_r=rep, mu_g=rep,
+        mix_w1_p=P(None, None, None), mix_w2=P(None, None, None),
+        Wr=P(None, TP), Wk=P(None, TP), Wv=P(None, TP), Wg=P(None, TP),
+        Wo=P(TP, None), w0=rep, dw1=P(None, None), dw2=P(None, None),
+        u=P(TP, None) if _divisible(H, mesh, TP) else P(None, None),
+        ln_x=rep, mu_ck=rep, mu_cr=rep,
+        Wck=P(None, TP), Wcv=P(TP, None), Wcr=P(None, TP))
+
+
+def _spec_pos(cfg: ModelCfg, j: int, mesh):
+    t = cfg.layer_type(j)
+    if t == "a":
+        s = {"mixer": spec_attention(cfg, mesh)}
+    elif t == "m":
+        s = {"mixer": spec_mamba()}
+    else:
+        return {"mixer": spec_rwkv(cfg, mesh)}
+    s["ffn"] = spec_moe() if cfg.is_moe_layer(j) else spec_swiglu()
+    return s
+
+
+def param_specs(cfg: ModelCfg, mesh, fsdp: bool = True,
+                mode: str = "train"):
+    """Spec pytree matching transformer.init_params(cfg) exactly.
+
+    fsdp=True additionally shards each *large* weight over the "data"
+    axis on its first unsharded divisible dim (ZeRO-3 / FSDP: GSPMD
+    all-gathers the shard just-in-time for each matmul and re-gathers
+    in the backward under remat). Without it a 398B model is 50GB/chip
+    on a 16-way TP axis — far over v5e HBM; with it, params scale with
+    the whole pod (796GB/256 = 3.1GB/chip for jamba).
+
+    mode="serve": weights must be *resident* — an FSDP re-gather per
+    decoded token costs ~(params/tp) x (dp-1) wire bytes per step,
+    ~90 ms/token for a 35B model (§Perf cell B). When TP-only fits
+    comfortably in HBM (<= ~11 GiB/chip) serving drops the data-axis
+    sharding entirely; bigger models keep the 2D layout (per-step comm
+    then scales with the tiny decode activations, not the weights)."""
+    if mode == "serve" and fsdp:
+        n_par = sum(x.size for x in jax.tree.leaves(_param_shapes(cfg)))
+        tp = mesh.shape.get(TP, 1)
+        # MoE keeps the 2D layout regardless: expert matmuls contract
+        # D over "data" — dropping it replicates expert compute across
+        # the data axis (measured 7x compute on phi3.5).
+        fsdp = (n_par * 2 / tp) > 11 * 2**30 or cfg.moe is not None
+    if cfg.kind == "encdec":
+        specs = encdec_param_specs(cfg, mesh)
+    else:
+        vocab = P(TP, None) if _divisible(cfg.vocab, mesh, TP) \
+            else P(None, None)
+        specs = {
+            "embed": vocab,
+            "final_ln": P(None),
+            "groups": {f"pos{j}": _stack(_spec_pos(cfg, j, mesh))
+                       for j in range(len(cfg.pattern))},
+        }
+        if not cfg.tie_embeddings:
+            specs["unembed"] = P(None, TP)
+        if cfg.frontend is not None:
+            specs["adapter"] = {"w": P(None, None), "b": P(None)}
+    if fsdp:
+        shapes = _param_shapes(cfg)
+        # FSDP only on the layer stacks: the embedding table must keep a
+        # pure vocab sharding — a gather from a 2D-sharded table forces
+        # GSPMD into "involuntary full rematerialization" (replicates
+        # the table); layer weights are matmul operands and partition
+        # cleanly.
+        for k in ("groups", "encoder", "decoder"):
+            if k in specs:
+                specs[k] = _fsdp_augment(specs[k], shapes[k], mesh)
+        if "unembed" in specs:
+            specs["unembed"] = _fsdp_augment(
+                specs["unembed"], shapes["unembed"], mesh)
+    return specs
+
+
+_FSDP_MIN = 1 << 20   # don't bother sharding leaves under 1M elements
+
+
+def _param_shapes(cfg: ModelCfg):
+    from repro.models import encdec, transformer
+    init = (encdec.init_params if cfg.kind == "encdec"
+            else transformer.init_params)
+    return jax.eval_shape(lambda: init(jax.random.PRNGKey(0), cfg))
+
+
+def _fsdp_augment(pspecs, shapes, mesh):
+    dsize = mesh.shape.get("data", 1)
+
+    def one(spec, shape):
+        if dsize == 1 or shape.size < _FSDP_MIN:
+            return spec
+        parts = list(tuple(spec) + (None,) * (len(shape.shape) - len(spec)))
+        # ndim>=3 leaves are group-stacked: never shard the scan axis
+        # (a sharded xs axis would collective on every scan step)
+        start = 1 if len(shape.shape) >= 3 else 0
+        for i in range(start, len(parts)):
+            if parts[i] is None and shape.shape[i] % dsize == 0 \
+                    and shape.shape[i] >= dsize:
+                parts[i] = "data"
+                break
+        return P(*parts)
+
+    return jax.tree.map(one, pspecs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def encdec_param_specs(cfg: ModelCfg, mesh):
+    vocab = P(TP, None) if _divisible(cfg.vocab, mesh, TP) else P(None, None)
+    enc = _stack({"attn": spec_attention(cfg, mesh), "ffn": spec_swiglu()})
+    dec = _stack({"attn": spec_attention(cfg, mesh),
+                  "xattn": spec_cross_attention(cfg, mesh),
+                  "ffn": spec_swiglu()})
+    return {
+        "embed": vocab,
+        "adapter": {"w": P(None, None), "b": P(None)},
+        "encoder": enc, "enc_ln": P(None),
+        "decoder": dec, "final_ln": P(None),
+    }
+
+
+# ------------------------------------------------------------- optimizer
+
+def zero1_specs(pspecs, shapes, mesh):
+    """ZeRO-1: add "data" sharding to the first axis that is unsharded
+    and divisible by the data-axis size (optimizer m/v/ef tensors)."""
+    dsize = mesh.shape.get("data", 1)
+
+    def one(spec, shape):
+        flat = tuple(a for part in spec if part is not None
+                     for a in (part if isinstance(part, tuple) else (part,)))
+        if dsize == 1 or "data" in flat:
+            return spec          # FSDP already shards this leaf over data
+        parts = list(tuple(spec) + (None,) * (len(shape.shape) - len(spec)))
+        start = 1 if len(shape.shape) >= 3 else 0   # skip the scan axis
+        for i in range(start, len(parts)):
+            if parts[i] is None and shape.shape[i] % dsize == 0 \
+                    and shape.shape[i] >= dsize:
+                parts[i] = "data"
+                break
+        return P(*parts)
+
+    return jax.tree.map(one, pspecs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------- inputs
+
+def batch_axes(mesh):
+    """The pure-DP axes for the global batch dim."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def data_specs(mesh, global_batch: int):
+    """tokens/labels (B, S) and prefix embeddings (B, P, F)."""
+    dp = batch_axes(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    b = dp if global_batch % n_dp == 0 else None
+    return dict(tokens=P(b, None), labels=P(b, None),
+                prefix=P(b, None, None))
+
+
+def cache_specs(cfg: ModelCfg, mesh, batch: int):
+    """Decode-cache spec tree matching transformer.init_cache.
+
+    KV cache: batch over DP axes; sequence dim over "model" (SP — the
+    long-context axis). When the batch cannot shard (long_500k b=1) the
+    sequence dim also takes the idle "data" axis, so a 500k-token cache
+    spreads over the whole pod.
+    """
+    dp = batch_axes(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    b = dp if batch % n_dp == 0 else None
+    seq = (TP,) if b is not None else tuple(dp) + (TP,)
+    layers_c = {}
+    for j, t in enumerate(cfg.pattern):
+        if t == "a":
+            kv = P(None, b, None, seq, None)
+            layers_c[f"pos{j}"] = dict(k=kv, v=kv)
+        elif t == "m":
+            layers_c[f"pos{j}"] = dict(conv=P(None, b, TP, None),
+                                       h=P(None, b, TP, None))
+        else:
+            H = cfg.d_model // cfg.rwkv.head_dim
+            wkv_h = TP if H % mesh.shape.get(TP, 1) == 0 else None
+            layers_c[f"pos{j}"] = dict(
+                shift_t=P(None, b, None),
+                wkv=P(None, b, wkv_h, None, None),
+                shift_c=P(None, b, None))
+    spec = {"len": P(), "layers": layers_c}
+    if cfg.window is not None:
+        spec["pos"] = P(None)   # ring slot table: tiny, replicated
+    return spec
+
+
+def encdec_cache_specs(cfg: ModelCfg, mesh, batch: int):
+    dp = batch_axes(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    b = dp if batch % n_dp == 0 else None
+    seq = (TP,) if b is not None else tuple(dp) + (TP,)
+    kv = P(None, b, None, seq, None)
+    return {"len": P(), "self_k": kv, "self_v": kv,
+            "mem_k": kv, "mem_v": kv}

@@ -1,0 +1,53 @@
+"""kd / Zd-like baselines answer queries exactly (shared engine)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import baselines
+from tests.test_core_indexes import (brute_knn, brute_range_count,
+                                     check_queries, gen_points, live_points)
+
+
+@pytest.mark.parametrize("dist", ["uniform", "varden"])
+def test_kd_build_query(dist):
+    rng = np.random.default_rng(31)
+    pts = gen_points(rng, 1500, 2, dist)
+    t = baselines.kd_build(jnp.asarray(pts), phi=8, max_depth=16)
+    assert int(t.size) == len(pts)
+    np.testing.assert_array_equal(
+        np.sort(live_points(t.view()), axis=0), np.sort(pts, axis=0))
+    check_queries(t.view(), pts, rng)
+
+
+def test_kd_insert_delete_rebuild():
+    rng = np.random.default_rng(37)
+    pts = gen_points(rng, 800, 2, "uniform")
+    extra = gen_points(rng, 300, 2, "uniform")
+    t = baselines.kd_build(jnp.asarray(pts), phi=8, max_depth=16)
+    t = baselines.kd_insert(t, jnp.asarray(extra), max_depth=16,
+                            capacity_rows=t.pts.shape[0] * 2)
+    assert int(t.size) == 1100
+    sel = rng.permutation(800)[:200]
+    t = baselines.kd_delete(t, jnp.asarray(pts[sel]), max_depth=16,
+                            capacity_rows=t.pts.shape[0])
+    assert int(t.size) == 900
+    keep = np.concatenate([np.delete(pts, sel, axis=0), extra])
+    check_queries(t.view(), keep, rng)
+
+
+@pytest.mark.parametrize("dist", ["uniform", "sweepline"])
+def test_zd_build_query(dist):
+    rng = np.random.default_rng(41)
+    pts = gen_points(rng, 1500, 2, dist)
+    t = baselines.zd_build(jnp.asarray(pts), phi=8)
+    assert int(t.size) == len(pts)
+    check_queries(t.view(), pts, rng)
+
+
+def test_zd_kd_leaf_sizes():
+    rng = np.random.default_rng(43)
+    pts = gen_points(rng, 2000, 2, "uniform")
+    kd = baselines.kd_build(jnp.asarray(pts), phi=8, max_depth=16)
+    cnt = np.asarray(kd.count)[np.asarray(kd.active)]
+    assert cnt.max() <= 8  # kd median splits always reach phi

@@ -1,0 +1,185 @@
+"""Hypothesis property tests for the index invariants (DESIGN.md Sec. 8).
+
+Shapes are held constant (n=96 points, masked) so jit caches across
+examples; hypothesis varies coordinates — including tiny ranges that
+force heavy duplicates, the regime that broke routed deletion before
+the banded fix."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.core import porth, queries, spac
+
+N, M, K = 96, 32, 5
+HI = 1 << 12
+ROOT_LO = jnp.zeros((2,), jnp.int32)
+ROOT_HI = jnp.full((2,), HI, jnp.int32)
+
+coords = st.one_of(
+    hnp.arrays(np.int32, (N, 2), elements=st.integers(0, HI - 1)),
+    hnp.arrays(np.int32, (N, 2), elements=st.integers(0, 7)),   # dupes
+    hnp.arrays(np.int32, (N, 2), elements=st.integers(100, 110)),
+)
+batch = hnp.arrays(np.int32, (M, 2), elements=st.integers(0, HI - 1))
+
+SET = settings(max_examples=12, deadline=None)
+
+
+def brute_knn(pts_ok, q, k):
+    pts, ok = pts_ok
+    d2 = np.sum((pts.astype(np.float64) - q.astype(np.float64)) ** 2, -1)
+    d2 = np.where(ok, d2, np.inf)
+    return np.sort(d2)[:k]
+
+
+def tree_points(view):
+    ok = np.asarray(view.valid & view.active[:, None]).reshape(-1)
+    pts = np.asarray(view.pts).reshape(-1, 2)
+    return pts, ok
+
+
+def _build_spac(pts, mask=None):
+    return spac.build(jnp.asarray(pts), mask, phi=8, bits=12,
+                      coord_bits=12, capacity_rows=256)
+
+
+def _build_porth(pts, mask=None):
+    return porth.build(jnp.asarray(pts), ROOT_LO, ROOT_HI, mask, phi=8,
+                       lam=2, rounds=6, capacity_rows=512)
+
+
+@SET
+@given(coords, batch)
+def test_spac_knn_exact_after_updates(pts, upd):
+    t = _build_spac(pts)
+    t = spac.insert(t, jnp.asarray(upd))
+    t = spac.delete(t, jnp.asarray(pts[: N // 3]))
+    assert not bool(t.overflowed)
+    view = t.view()
+    tp = tree_points(view)
+    # multiset size invariant
+    assert tp[1].sum() == N + M - N // 3
+    qs = jnp.asarray(np.vstack([upd[:4], pts[:4]]))
+    d2, ids = queries.knn(view, qs, K)
+    for i in range(qs.shape[0]):
+        bf = brute_knn(tp, np.asarray(qs[i]), K)
+        got = np.sort(np.asarray(d2[i], np.float64))
+        np.testing.assert_allclose(got[: len(bf)], bf, rtol=1e-6)
+
+
+@SET
+@given(coords, batch)
+def test_porth_knn_exact_after_updates(pts, upd):
+    t = _build_porth(pts)
+    t = porth.insert(t, jnp.asarray(upd))
+    t = porth.delete(t, jnp.asarray(pts[: N // 3]))
+    assert not bool(t.overflowed)
+    view = t.view()
+    tp = tree_points(view)
+    assert tp[1].sum() == N + M - N // 3
+    qs = jnp.asarray(upd[:6])
+    d2, _ = queries.knn(view, qs, K)
+    for i in range(qs.shape[0]):
+        bf = brute_knn(tp, np.asarray(qs[i]), K)
+        np.testing.assert_allclose(
+            np.sort(np.asarray(d2[i], np.float64))[: len(bf)], bf,
+            rtol=1e-6)
+
+
+@SET
+@given(coords, batch)
+def test_insert_equals_bulk_build(pts, upd):
+    """insert(build(P), Q) answers queries exactly like build(P u Q)."""
+    t1 = spac.insert(_build_spac(pts), jnp.asarray(upd))
+    allp = np.vstack([pts, upd])
+    t2 = _build_spac(allp)
+    qs = jnp.asarray(upd[:6])
+    d1, _ = queries.knn(t1.view(), qs, K)
+    d2_, _ = queries.knn(t2.view(), qs, K)
+    np.testing.assert_allclose(np.sort(np.asarray(d1), axis=1),
+                               np.sort(np.asarray(d2_), axis=1), rtol=1e-6)
+
+
+@SET
+@given(coords)
+def test_delete_restores_build_answers(pts):
+    """build(P) -> insert(Q) -> delete(Q) answers like build(P)."""
+    q = (pts[: M] + 17) % HI
+    t = _build_spac(pts)
+    t = spac.insert(t, jnp.asarray(q))
+    t = spac.delete(t, jnp.asarray(q))
+    tp = tree_points(t.view())
+    assert tp[1].sum() == N
+    ref = _build_spac(pts)
+    qs = jnp.asarray(pts[:6])
+    d1, _ = queries.knn(t.view(), qs, K)
+    d2_, _ = queries.knn(ref.view(), qs, K)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2_), rtol=1e-6)
+
+
+@SET
+@given(coords)
+def test_spac_structural_invariants(pts):
+    t = spac.insert(_build_spac(pts), jnp.asarray(pts[:M]))
+    valid = np.asarray(t.valid)
+    count = np.asarray(t.count)
+    active = np.asarray(t.active)
+    # occupancy: count == number of valid slots, within capacity
+    np.testing.assert_array_equal(valid.sum(1)[active], count[active])
+    assert (count <= t.row_capacity).all()
+    # bbox tightness: every valid point inside its row bbox
+    p = np.asarray(t.pts)
+    lo = np.asarray(t.bbox_lo)[:, None]
+    hi = np.asarray(t.bbox_hi)[:, None]
+    ok = valid & active[:, None]
+    assert ((p >= lo) | ~ok[..., None]).all()
+    assert ((p <= hi) | ~ok[..., None]).all()
+    # directory: active rows sorted by min_code
+    order = np.asarray(t.order)
+    mc = np.asarray(t.min_code)[order]
+    nr = int(t.num_rows)
+    assert (np.diff(mc[:nr].astype(np.int64)) >= 0).all()
+    # codes stored == recomputed encode(points)
+    codes = np.asarray(t.codes)
+    ref = np.asarray(spac._encode(jnp.asarray(p.reshape(-1, 2)), t.curve,
+                                  t.bits, t.coord_bits)).reshape(codes.shape)
+    np.testing.assert_array_equal(codes[ok], ref[ok])
+
+
+@SET
+@given(coords)
+def test_range_count_exact(pts):
+    t = _build_spac(pts)
+    lo = jnp.asarray([[0, 0], [10, 10], [0, 2000]], jnp.int32)
+    hi = jnp.asarray([[HI, HI], [200, 220], [3000, 2100]], jnp.int32)
+    cnt, trunc = queries.range_count(t.view(), lo, hi, max_rows=256)
+    assert not bool(trunc.any())
+    for i in range(3):
+        bf = int(np.sum(np.all((pts >= np.asarray(lo[i]))
+                               & (pts <= np.asarray(hi[i])), -1)))
+        assert int(cnt[i]) == bf
+
+
+@SET
+@given(coords)
+def test_porth_history_independence(pts):
+    """Orth-trees are history-independent *modulo leaf wrapping* (paper
+    Sec. 5.1.3): different insertion orders may wrap/merge underfull
+    sibling cells differently, but the point multiset and every query
+    answer must be order-independent. Structural statistics agree up to
+    leaf-wrap: total size and occupied-cell count within merge slack."""
+    a, b = pts[: N // 2], pts[N // 2:]
+    t1 = porth.insert(_build_porth(a), jnp.asarray(b))
+    t2 = porth.insert(_build_porth(b), jnp.asarray(a))
+    s1 = int(np.asarray(t1.count)[np.asarray(t1.active)].sum())
+    s2 = int(np.asarray(t2.count)[np.asarray(t2.active)].sum())
+    assert s1 == s2 == N
+    qs = jnp.asarray(pts[:8])
+    d1, _ = queries.knn(t1.view(), qs, K)
+    d2_, _ = queries.knn(t2.view(), qs, K)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2_), rtol=1e-6)
