@@ -1,9 +1,10 @@
-"""Shared benchmark harness: index adapters + timing.
+"""Shared benchmark harness: registry-driven index construction + timing.
 
-Every index exposes build/insert/delete/view behind one dict so each
-figure script is a loop over INDEXES x distributions. CPU wall-times
-here are *relative* evidence (the paper's absolute numbers come from a
-112-core Xeon); the claims we validate are ratios — e.g. SPaC vs the
+Index construction goes through :func:`repro.core.make_index` — the same
+facade every example and test uses — so each figure script is a loop over
+``BENCH_KINDS`` x distributions with no per-family adapter code. CPU
+wall-times here are *relative* evidence (the paper's absolute numbers come
+from a 112-core Xeon); the claims we validate are ratios — e.g. SPaC vs the
 total-order CPAM baseline, P-Orth vs the Zd-style presort — which are
 hardware-portable because both sides run the same JAX/XLA substrate.
 """
@@ -14,73 +15,23 @@ import functools
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import baselines, porth, queries, spac
+from repro.core import make_index
 from repro.data import points as gen
 
 HI = gen.DEFAULT_HI
-ROOT_LO = jnp.zeros((2,), jnp.int32)
-ROOT_HI = jnp.full((2,), HI, jnp.int32)
+
+# every registered backend the figure grids sweep (cpam-* are the
+# total-order ablation; spac-m is a spac-z alias and would be redundant)
+BENCH_KINDS = ("porth", "spac-h", "spac-z", "cpam-h", "cpam-z", "zd", "kd")
 
 
-def _cap(n, phi):
-    return 4 * ((n + phi - 1) // phi) + 64
-
-
-def make_indexes(phi: int = 32, total_cap: int | None = None):
-    """total_cap: row capacity sized for the *max* points ever present."""
-    def cap(n):
-        return _cap(total_cap or n, phi)
-
-    return {
-        "porth": dict(
-            build=lambda p: porth.build(
-                p, ROOT_LO, ROOT_HI, phi=phi, capacity_rows=cap(len(p))),
-            insert=lambda t, p: porth.insert(t, p),
-            delete=lambda t, p: porth.delete(t, p),
-            view=lambda t: t.view()),
-        "spac-h": dict(
-            build=lambda p: spac.build(
-                p, phi=phi, curve="hilbert", capacity_rows=cap(len(p))),
-            insert=lambda t, p: spac.insert(t, p),
-            delete=lambda t, p: spac.delete(t, p),
-            view=lambda t: t.view()),
-        "spac-z": dict(
-            build=lambda p: spac.build(
-                p, phi=phi, curve="morton", capacity_rows=cap(len(p))),
-            insert=lambda t, p: spac.insert(t, p),
-            delete=lambda t, p: spac.delete(t, p),
-            view=lambda t: t.view()),
-        "cpam-h": dict(   # total-order ablation: sorts every touched row
-            build=lambda p: spac.build(
-                p, phi=phi, curve="hilbert", capacity_rows=cap(len(p))),
-            insert=lambda t, p: spac.insert(t, p, sort_rows=True),
-            delete=lambda t, p: spac.delete(t, p),
-            view=lambda t: t.view()),
-        "cpam-z": dict(
-            build=lambda p: spac.build(
-                p, phi=phi, curve="morton", capacity_rows=cap(len(p))),
-            insert=lambda t, p: spac.insert(t, p, sort_rows=True),
-            delete=lambda t, p: spac.delete(t, p),
-            view=lambda t: t.view()),
-        "zd": dict(
-            build=lambda p: baselines.zd_build(
-                p, phi=phi, capacity_rows=cap(len(p))),
-            insert=lambda t, p: baselines.zd_insert(
-                t, p, capacity_rows=t.pts.shape[0]),
-            delete=lambda t, p: baselines.zd_delete(
-                t, p, capacity_rows=t.pts.shape[0]),
-            view=lambda t: t.view()),
-        "kd": dict(
-            build=lambda p: baselines.kd_build(
-                p, phi=phi, capacity_rows=cap(len(p))),
-            insert=lambda t, p: baselines.kd_insert(
-                t, p, capacity_rows=t.pts.shape[0]),
-            delete=lambda t, p: baselines.kd_delete(
-                t, p, capacity_rows=t.pts.shape[0]),
-            view=lambda t: t.view()),
-    }
+def build_index(kind: str, pts, *, phi: int = 32,
+                capacity_points: int | None = None, **params):
+    """Build one benchmark index; capacity sized for the max points ever
+    present (``capacity_points``) by the facade's shared heuristic."""
+    return make_index(kind, pts, phi=phi, capacity_points=capacity_points,
+                      **params)
 
 
 def timed(fn, *args, warmup: int = 1, reps: int = 3, **kw):

@@ -16,20 +16,18 @@ RATIOS = (0.001, 0.01, 0.1)
 
 
 def run(n=100_000, dist="uniform", indexes=None, phi=32, verbose=True):
-    idx = common.make_indexes(phi=phi, total_cap=int(n * 1.2))
     names = indexes or ["porth", "spac-h", "spac-z", "kd"]
     pts = common.points_for(dist, n)
     extra = common.points_for(dist, int(n * 0.1), seed=5)
     out = {}
     for name in names:
-        ix = idx[name]
-        tree = ix["build"](pts)
+        idx = common.build_index(name, pts, phi=phi,
+                                 capacity_points=int(n * 1.2))
         rec = {}
         for r in RATIOS:
             m = max(int(n * r), 64)
-            rec[f"ins_{r}"], _ = common.timed(ix["insert"], tree,
-                                              extra[:m])
-            rec[f"del_{r}"], _ = common.timed(ix["delete"], tree, pts[:m])
+            rec[f"ins_{r}"], _ = common.timed(idx.insert, extra[:m])
+            rec[f"del_{r}"], _ = common.timed(idx.delete, pts[:m])
         out[name] = rec
         if verbose:
             print(common.fmt_row(name, [rec[f"ins_{r}"] for r in RATIOS]

@@ -16,12 +16,13 @@ Run:  PYTHONPATH=src python -m benchmarks.fig3_grid --n 50000
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import queries as Q
+from repro.data.points import query_boxes
 
 from . import common
 
@@ -30,51 +31,46 @@ DISTS = ("uniform", "sweepline", "varden")
 
 def run(n=50_000, nq=500, ratios=(0.1, 0.01), indexes=None, phi=32,
         verbose=True, knn_k=10):
-    idx = common.make_indexes(phi=phi, total_cap=n)
-    names = indexes or list(idx)
+    names = indexes or list(common.BENCH_KINDS)
     out = {}
     for dist in DISTS:
         pts = common.points_for(dist, n)
         ind_q, ood_q = common.knn_queries(dist, nq)
-        lo, hi = __import__("repro.data.points", fromlist=["query_boxes"]
-                            ).query_boxes(jax.random.PRNGKey(3), nq, 2,
-                                          common.HI // 64)
+        lo, hi = query_boxes(jax.random.PRNGKey(3), nq, 2,
+                             common.HI // 64)
         for name in names:
-            ix = idx[name]
+            build = functools.partial(common.build_index, name, phi=phi,
+                                      capacity_points=n)
             rec = {}
-            rec["build"], tree = common.timed(ix["build"], pts)
+            rec["build"], idx = common.timed(build, pts)
             # incremental insert: half static, half in batches
             for r in ratios:
                 m = max(int(n * r), 64)
-                t, tree2 = common.timed_once(ix["insert"], tree,
-                                             pts[:m])   # warm compile
+                common.timed_once(idx.insert, pts[:m])   # warm compile
                 total = 0.0
-                tree2 = ix["build"](pts[: n // 2])
+                idx2 = build(pts[: n // 2])
                 steps = max((n // 2) // m, 1)
                 for b in range(steps):
                     batch = pts[n // 2 + b * m: n // 2 + (b + 1) * m]
                     if batch.shape[0] < m:
                         break
-                    t, tree2 = common.timed_once(ix["insert"], tree2, batch)
+                    t, idx2 = common.timed_once(idx2.insert, batch)
                     total += t
                 rec[f"inc_ins_{r}"] = total
                 if r == ratios[-1]:
-                    view = ix["view"](tree2)
-                    rec["knn_ind"], _ = common.timed(
-                        Q.knn, view, ind_q, knn_k)
-                    rec["knn_ood"], _ = common.timed(
-                        Q.knn, view, ood_q, knn_k)
+                    rec["knn_ind"], _ = common.timed(idx2.knn, ind_q, knn_k)
+                    rec["knn_ood"], _ = common.timed(idx2.knn, ood_q, knn_k)
                     rec["range_cnt"], (cnt, trunc) = common.timed(
-                        Q.range_count, view, lo, hi, 512)
+                        idx2.range_count, lo, hi, 512)
                     rec["trunc"] = int(jnp.sum(trunc))
                 # incremental delete at this ratio
                 total = 0.0
-                tree3 = tree2 if r == ratios[-1] else ix["build"](pts)
+                idx3 = idx2 if r == ratios[-1] else build(pts)
                 for b in range(min(steps, 4)):
                     batch = pts[n // 2 + b * m: n // 2 + (b + 1) * m]
                     if batch.shape[0] < m:
                         break
-                    t, tree3 = common.timed_once(ix["delete"], tree3, batch)
+                    t, idx3 = common.timed_once(idx3.delete, batch)
                     total += t
                 rec[f"inc_del_{r}"] = total
             out[(dist, name)] = rec

@@ -10,8 +10,6 @@ from __future__ import annotations
 
 import argparse
 
-from repro.core import queries as Q
-
 from . import common
 
 KS = (1, 10, 100)
@@ -19,24 +17,21 @@ KS = (1, 10, 100)
 
 def run(n=50_000, nq=500, dist="varden", indexes=None, phi=32,
         batch_ratio=0.01, verbose=True):
-    idx = common.make_indexes(phi=phi, total_cap=n)
     names = indexes or ["porth", "spac-h", "spac-z", "kd", "zd"]
     pts = common.points_for(dist, n)
     ind_q, ood_q = common.knn_queries(dist, nq)
     out = {}
     m = max(int(n * batch_ratio), 64)
     for name in names:
-        ix = idx[name]
-        tree = ix["build"](pts[: n // 2])
+        idx = common.build_index(name, pts[: n // 2], phi=phi,
+                                 capacity_points=n)
         steps = (n // 2) // m
         for b in range(steps):
-            tree = ix["insert"](tree, pts[n // 2 + b * m: n // 2 +
-                                          (b + 1) * m])
-        view = ix["view"](tree)
+            idx = idx.insert(pts[n // 2 + b * m: n // 2 + (b + 1) * m])
         rec = {}
         for k in KS:
-            rec[f"ind_k{k}"], _ = common.timed(Q.knn, view, ind_q, k)
-            rec[f"ood_k{k}"], _ = common.timed(Q.knn, view, ood_q, k)
+            rec[f"ind_k{k}"], _ = common.timed(idx.knn, ind_q, k)
+            rec[f"ood_k{k}"], _ = common.timed(idx.knn, ood_q, k)
         out[name] = rec
         if verbose:
             print(common.fmt_row(name, [rec[f"ind_k{k}"] for k in KS]

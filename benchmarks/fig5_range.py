@@ -13,7 +13,6 @@ import argparse
 
 import jax
 
-from repro.core import queries as Q
 from repro.data.points import query_boxes
 
 from . import common
@@ -23,21 +22,18 @@ SIDES = (2**10, 2**12, 2**14)    # of a 2^20 domain
 
 def run(n=50_000, nq=200, dist="uniform", indexes=None, phi=32,
         verbose=True):
-    idx = common.make_indexes(phi=phi, total_cap=n)
     names = indexes or ["porth", "spac-h", "spac-z", "kd", "zd"]
     pts = common.points_for(dist, n)
     out = {}
     for name in names:
-        ix = idx[name]
-        tree = ix["build"](pts)
-        view = ix["view"](tree)
+        idx = common.build_index(name, pts, phi=phi, capacity_points=n)
         rec = {}
         for side in SIDES:
             lo, hi = query_boxes(jax.random.PRNGKey(side), nq, 2, side)
             # expected hits ~ n * (side/2^20)^2; cap with slack
             exp = max(int(n * (side / common.HI) ** 2 * 8), 64)
             t, (ids, cnt, trunc) = common.timed(
-                Q.range_list, view, lo, hi, 1024, exp)
+                idx.range_list, lo, hi, 1024, exp)
             rec[f"side_{side}"] = t
             rec[f"out_{side}"] = float(cnt.mean())
             rec[f"trunc_{side}"] = int(trunc.sum())

@@ -11,57 +11,31 @@ from __future__ import annotations
 
 import argparse
 
-import jax.numpy as jnp
-
-from repro.core import porth, queries as Q, spac
-
 from . import common
 
-HI3 = 1 << 20
+# per-kind params for the 3D regime: 10-bit/dim SFC codes on a 2^20
+# domain; porth derives lam=2 (octree, 2 levels/round) from dim itself
+KINDS_3D = {
+    "porth": dict(),
+    "spac-h": dict(bits=10, coord_bits=20),
+    "spac-z": dict(bits=10, coord_bits=20),
+}
 
 
-def make_indexes_3d(phi=32, total_cap=None):
-    lo = jnp.zeros((3,), jnp.int32)
-    hi = jnp.full((3,), HI3, jnp.int32)
-
-    def cap(n):
-        return 4 * ((total_cap or n) // phi + 1) + 64
-
-    return {
-        "porth": dict(
-            build=lambda p: porth.build(p, lo, hi, phi=phi, lam=2,
-                                        capacity_rows=cap(len(p))),
-            insert=porth.insert, delete=porth.delete,
-            view=lambda t: t.view()),
-        "spac-h": dict(
-            build=lambda p: spac.build(p, phi=phi, curve="hilbert",
-                                       bits=10, coord_bits=20,
-                                       capacity_rows=cap(len(p))),
-            insert=spac.insert, delete=spac.delete,
-            view=lambda t: t.view()),
-        "spac-z": dict(
-            build=lambda p: spac.build(p, phi=phi, curve="morton",
-                                       bits=10, coord_bits=20,
-                                       capacity_rows=cap(len(p))),
-            insert=spac.insert, delete=spac.delete,
-            view=lambda t: t.view()),
-    }
-
-
-def run(n=30_000, nq=300, verbose=True):
+def run(n=30_000, nq=300, phi=32, verbose=True):
     out = {}
     for dist in ("uniform", "varden"):
         pts = common.points_for(dist, n, dim=3)
         ind_q, _ = common.knn_queries(dist, nq, dim=3)
-        for name, ix in make_indexes_3d(total_cap=n).items():
+        for name, params in KINDS_3D.items():
             rec = {}
-            rec["build"], tree = common.timed(ix["build"], pts)
+            rec["build"], idx = common.timed(
+                common.build_index, name, pts, phi=phi,
+                capacity_points=n, **params)
             m = max(n // 100, 64)
-            rec["ins"], tree = common.timed(ix["insert"], tree,
-                                            pts[:m])
-            rec["del"], tree = common.timed(ix["delete"], tree, pts[:m])
-            rec["knn"], _ = common.timed(Q.knn, ix["view"](tree), ind_q,
-                                         10)
+            rec["ins"], idx = common.timed(idx.insert, pts[:m])
+            rec["del"], idx = common.timed(idx.delete, pts[:m])
+            rec["knn"], _ = common.timed(idx.knn, ind_q, 10)
             out[(dist, name)] = rec
             if verbose:
                 print(common.fmt_row(f"{dist[:6]}/{name}",

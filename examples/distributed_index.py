@@ -1,9 +1,11 @@
-"""The paper's index sharded over a device mesh (shard_map).
+"""The paper's index sharded over a device mesh, behind the facade.
 
-Runs on 8 forced host devices: SFC-range partitioning with sampled
-splitters, one all_to_all per batch update, fan-out/merge kNN. The
-identical code drives the 256-chip production mesh (see
-tests/test_distributed.py and DESIGN.md Sec. 5).
+`make_index(kind, pts, mesh=mesh)` returns a `DistributedIndex` with
+the same surface as the local facade: SFC-range partitioning with
+sampled splitters, one all_to_all per batch update, fan-out/merge kNN.
+Runs here on 8 forced host devices; the identical code drives the
+256-chip production mesh (see tests/test_distributed.py and DESIGN.md
+Sec. 5).
 
     PYTHONPATH=src python examples/distributed_index.py
 """
@@ -18,7 +20,7 @@ import time  # noqa: E402
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
-from repro.core import distributed as D  # noqa: E402
+from repro.core import make_index  # noqa: E402
 from repro.data import points as gen  # noqa: E402
 
 
@@ -29,21 +31,20 @@ def main():
     pts = gen.uniform(key, n, 2)
 
     t0 = time.time()
-    idx = D.build(pts, mesh, phi=32)
-    jax.block_until_ready(idx.tree.pts)
+    idx = make_index("spac-h", pts, mesh=mesh, phi=32)
+    idx.block_until_ready()
     print(f"built over {mesh.shape['data']} shards in "
-          f"{time.time() - t0:.2f}s; size={int(D.size(idx))}, "
+          f"{time.time() - t0:.2f}s; size={len(idx)}, "
           f"dropped={int(idx.dropped)}")
 
     batch = gen.uniform(jax.random.PRNGKey(1), 2_048, 2)
     t0 = time.time()
-    idx = D.insert(idx, batch, mesh)
-    jax.block_until_ready(idx.tree.pts)
+    idx = idx.insert(batch).block_until_ready()
     print(f"all_to_all batch insert of {batch.shape[0]}: "
-          f"{time.time() - t0:.2f}s; size={int(D.size(idx))}")
+          f"{time.time() - t0:.2f}s; size={len(idx)}")
 
     qs = gen.uniform(jax.random.PRNGKey(2), 64, 2)
-    d2, nbrs, ok = D.knn(idx, qs, 10, mesh)
+    d2, nbrs, ok = idx.knn(qs, 10)
     # exactness: compare one query against brute force
     allp = jnp.concatenate([pts, batch]).astype(jnp.float32)
     diff = allp - qs[0].astype(jnp.float32)
@@ -54,7 +55,7 @@ def main():
 
     lo = jnp.array([[0, 0]], jnp.int32)
     hi = jnp.array([[1 << 19, 1 << 19]], jnp.int32)
-    cnt, trunc = D.range_count(idx, lo, hi, mesh, max_rows=2048)
+    cnt, trunc = idx.range_count(lo, hi, max_rows=2048)
     print(f"distributed range count: {int(cnt[0])}")
 
 

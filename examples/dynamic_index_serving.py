@@ -5,8 +5,14 @@ batched updates with low latency while serving kNN + range queries —
 measured here as sustained update/query throughput over many epochs
 (the paper's "incremental" dynamic setting, Sec. 5.1).
 
+The service runs on the `SpatialIndex` facade in serving mode:
+`donate=True` releases the old tree's buffers into each update, the
+jit-cached update closures guarantee the fixed-shape hot path never
+retraces, and capacity management is automatic (an overflow triggers
+the facade's grow -> retry -> compact ladder instead of an assert).
+
     PYTHONPATH=src python examples/dynamic_index_serving.py \
-        [--n 200000] [--dist varden]
+        [--n 200000] [--dist varden] [--kind spac-h]
 """
 
 import argparse
@@ -15,8 +21,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import queries as Q
-from repro.core import spac
+from repro.core import make_index
 from repro.data import points as gen
 
 
@@ -25,6 +30,7 @@ def main():
     ap.add_argument("--n", type=int, default=200_000)
     ap.add_argument("--dist", default="uniform",
                     choices=list(gen.GENERATORS))
+    ap.add_argument("--kind", default="spac-h")
     ap.add_argument("--epochs", type=int, default=20)
     ap.add_argument("--queries", type=int, default=512)
     ap.add_argument("--k", type=int, default=10)
@@ -40,9 +46,11 @@ def main():
                                      gen.DEFAULT_HI // 64)
 
     t0 = time.time()
-    tree = spac.build(stream[: n // 2], phi=32,
-                      capacity_rows=4 * (n // 32) + 64)
-    jax.block_until_ready(tree.pts)
+    # capacity_points sizes rows for the lifetime maximum up front;
+    # donate=True hands the old tree's buffers to each update step
+    idx = make_index(args.kind, stream[: n // 2], phi=32,
+                     capacity_points=n, donate=True)
+    idx.block_until_ready()
     print(f"bootstrap build: {n // 2} pts in {time.time() - t0:.2f}s")
 
     ins_t = del_t = knn_t = rng_t = 0.0
@@ -52,31 +60,29 @@ def main():
         if batch.shape[0] < m:
             break
         t0 = time.time()
-        tree = spac.insert(tree, batch)
-        jax.block_until_ready(tree.pts)
+        idx = idx.insert(batch).block_until_ready()
         ins_t += time.time() - t0
-        assert not bool(tree.overflowed), "resize needed: grow+compact"
 
         t0 = time.time()
-        d2, ids = Q.knn(tree.view(), ind_q, args.k)
+        d2, ids = idx.knn(ind_q, args.k)
         jax.block_until_ready(d2)
         knn_t += time.time() - t0
         n_knn += args.queries
 
         t0 = time.time()
-        cnt, trunc = Q.range_count(tree.view(), box_lo, box_hi, 1024)
+        cnt, trunc = idx.range_count(box_lo, box_hi, 1024)
         jax.block_until_ready(cnt)
         rng_t += time.time() - t0
         n_rng += args.queries
 
         # churn: retire a quarter of this batch
         t0 = time.time()
-        tree = spac.delete(tree, batch[: m // 4])
-        jax.block_until_ready(tree.pts)
+        idx = idx.delete(batch[: m // 4]).block_until_ready()
         del_t += time.time() - t0
 
-    size = int(tree.size)
-    print(f"[{args.dist}] served {args.epochs} epochs, final size {size}")
+    size = len(idx)
+    print(f"[{args.dist}/{args.kind}] served {args.epochs} epochs, "
+          f"final size {size}")
     print(f"  insert: {ins_t:6.2f}s  ({args.epochs * m / ins_t:>12,.0f}"
           f" pts/s)")
     print(f"  delete: {del_t:6.2f}s  ({args.epochs * m / 4 / del_t:>12,.0f}"
@@ -85,11 +91,10 @@ def main():
     print(f"  range : {rng_t:6.2f}s  ({n_rng / rng_t:>12,.0f} q/s)")
 
     # correctness spot-check against brute force on the final state
-    view = tree.view()
-    flat_ok = (view.valid & view.active[:, None]).reshape(-1)
-    flat_pts = view.pts.reshape(-1, 2).astype(jnp.float32)
+    flat_pts, flat_ok = idx.extract_points()
+    flat_pts = flat_pts.astype(jnp.float32)
     q = ind_q[:8].astype(jnp.float32)
-    d2, _ = Q.knn(view, ind_q[:8], args.k)
+    d2, _ = idx.knn(ind_q[:8], args.k)
     diff = flat_pts[None] - q[:, None]
     bf = jnp.sort(jnp.where(flat_ok[None], jnp.sum(diff * diff, -1),
                             jnp.inf), axis=1)[:, : args.k]

@@ -1,12 +1,16 @@
 """Quickstart: build a dynamic spatial index, update it, query it.
 
+One facade (`repro.core.make_index`) fronts every tree family in the
+paper — P-Orth, the SPaC family, and the kd/Zd baselines — with
+automatic capacity management (no `capacity_rows`, no `overflowed`).
+
     PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import porth, queries, spac
+from repro.core import BACKENDS, make_index
 from repro.data import points as gen
 
 key = jax.random.PRNGKey(0)
@@ -14,36 +18,32 @@ n = 20_000
 
 # ---------------------------------------------------------------- build
 pts = gen.uniform(key, n, dim=2)                     # (n, 2) int32
-tree = spac.build(pts, phi=32, curve="hilbert",
-                  capacity_rows=4 * (n // 32) + 64)
-print(f"SPaC-H tree: {int(tree.size)} points, "
-      f"{int(tree.num_rows)} leaf rows")
+idx = make_index("spac-h", pts, phi=32)              # SPaC over Hilbert
+print(f"SPaC-H index: {len(idx)} points in {int(idx.num_rows)} leaf "
+      f"rows ({idx.capacity_rows} allocated)")
 
 # --------------------------------------------------------- batch update
 batch = gen.uniform(jax.random.PRNGKey(1), 2_000, dim=2)
-tree = spac.insert(tree, batch)                      # parallel batch insert
-tree = spac.delete(tree, pts[:1_000])                # parallel batch delete
-assert not bool(tree.overflowed)
-print(f"after +2000/-1000: {int(tree.size)} points")
+idx = idx.insert(batch)              # parallel batch insert (auto-grows)
+idx = idx.delete(pts[:1_000])        # parallel batch delete
+print(f"after +2000/-1000: {len(idx)} points")
 
 # -------------------------------------------------------------- queries
 qpts = gen.uniform(jax.random.PRNGKey(2), 100, dim=2)
-d2, ids = queries.knn(tree.view(), qpts, k=10)       # exact batched kNN
-nbrs = queries.gather_points(tree.view(), ids)
+d2, nbrs, ok = idx.knn_points(qpts, k=10)            # exact batched kNN
 print(f"10-NN of first query: d2={d2[0, :3]}... -> {nbrs[0, 0]}")
 
 lo = jnp.array([[0, 0]], jnp.int32)
 hi = jnp.array([[1 << 18, 1 << 18]], jnp.int32)
-cnt, truncated = queries.range_count(tree.view(), lo, hi, max_rows=1024)
+cnt, truncated = idx.range_count(lo, hi, max_rows=1024)
 print(f"range count in [0, 2^18)^2: {int(cnt[0])} (truncated="
       f"{bool(truncated[0])})")
 
-# ------------------------------------------- P-Orth tree, same interface
-t2 = porth.build(pts, jnp.zeros(2, jnp.int32),
-                 jnp.full(2, gen.DEFAULT_HI, jnp.int32), phi=32)
-t2 = porth.insert(t2, batch)
-t2 = porth.delete(t2, pts[:1_000])      # same update sequence as SPaC
-d2_p, _ = queries.knn(t2.view(), qpts, k=10)
+# ------------------------------------- other backends, same interface
+print("registered backends:", ", ".join(sorted(BACKENDS)))
+t2 = make_index("porth", pts, phi=32)        # P-Orth tree (paper Sec. 3)
+t2 = t2.insert(batch).delete(pts[:1_000])    # same update sequence
+d2_p, _ = t2.knn(qpts, k=10)
 agree = bool(jnp.allclose(jnp.sort(d2_p, axis=1), jnp.sort(d2, axis=1)))
 print("P-Orth agrees with SPaC on kNN distances:", agree)
 assert agree

@@ -1,0 +1,11 @@
+"""Psi-JAX: reproduction of "Parallel Dynamic Spatial Indexes" in JAX.
+
+Subpackages (imported explicitly; nothing is pulled in eagerly here):
+
+  * ``repro.core``  -- the spatial indexes + the unified Index API
+  * ``repro.data``  -- synthetic workloads and batch streams
+  * ``repro.kernels`` / ``repro.launch`` / ``repro.serve`` -- accelerator
+    kernels, launch tooling, and the serving engine
+"""
+
+__version__ = "0.1.0"

@@ -1,6 +1,34 @@
 """Psi-JAX core: the paper's parallel dynamic spatial indexes.
 
-Public API:
+Index API (the recommended entry point)
+---------------------------------------
+
+:func:`make_index` builds any registered tree family behind one facade::
+
+    from repro.core import make_index
+    idx = make_index("spac-h", points, phi=32)   # or porth/spac-z/kd/zd/...
+    idx = idx.insert(batch).delete(stale)        # pure, auto-capacity
+    d2, ids = idx.knn(queries, k=10)             # exact, batched
+    counts, _ = idx.range_count(lo, hi)
+
+* **Registry** — ``index.BACKENDS`` maps kind -> :class:`index.Backend`;
+  ``register_backend`` adds new families that every benchmark/test loop
+  picks up. Registered: ``porth``, ``spac-h``, ``spac-z``, ``spac-m``,
+  ``cpam-h``, ``cpam-z``, ``kd``, ``zd``.
+* **Capacity policy** — row capacity comes from ``index.capacity_for``
+  (pass ``capacity_points=`` to size for the lifetime maximum). Builds and
+  inserts that overflow are transparently retried through
+  ``grow -> retry -> compact``; callers never see ``overflowed``.
+* **Retracing guarantees** — updates run through jit closures cached on
+  ``(backend, batch shape, dtype, static params)``; a fixed-shape update
+  stream compiles once. ``make_index(..., donate=True)`` additionally
+  donates the old tree's buffers on each update (serving hot path).
+* **Distributed** — ``make_index(kind, pts, mesh=mesh)`` returns a
+  :class:`index.DistributedIndex` sharded over the mesh with the same
+  surface (spac-family kinds).
+
+Low-level modules (power users / the paper's algorithms):
+
   * ``porth``   -- P-Orth tree (SFC-free parallel orth-tree, paper Sec. 3)
   * ``spac``    -- SPaC-tree family (parallel R-tree over SFC order, Sec. 4)
   * ``queries`` -- shared exact batched kNN / range engine
@@ -9,6 +37,13 @@ Public API:
   * ``distributed`` -- shard_map-sharded index across a device mesh
 """
 
-from . import baselines, leafstore, porth, queries, sfc, spac  # noqa: F401
+from . import baselines, index, leafstore, porth, queries, sfc, spac  # noqa: F401
+from .index import (BACKENDS, Backend, DistributedIndex,  # noqa: F401
+                    SpatialIndex, capacity_for, get_backend, make_index,
+                    register_backend)
 
-__all__ = ["baselines", "leafstore", "porth", "queries", "sfc", "spac"]
+__all__ = [
+    "BACKENDS", "Backend", "DistributedIndex", "SpatialIndex",
+    "baselines", "capacity_for", "get_backend", "index", "leafstore",
+    "make_index", "porth", "queries", "register_backend", "sfc", "spac",
+]

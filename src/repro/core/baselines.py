@@ -114,13 +114,20 @@ def kd_build(points, mask=None, *, phi: int = 32, max_depth: int = 24,
     return _finalize_groups(pts[perm], ok[perm], skey[perm], phi, R)
 
 
-def kd_insert(index: LeafIndex, new_pts, **kw) -> LeafIndex:
-    """BHL-tree semantics: batch update = full rebuild."""
+def _live_flat(index: LeafIndex):
     R, C, dim = index.pts.shape
-    old = index.pts.reshape(R * C, dim)
+    pts = index.pts.reshape(R * C, dim)
     ok = (index.valid & index.active[:, None]).reshape(R * C)
+    return pts, ok
+
+
+def kd_insert(index: LeafIndex, new_pts, new_mask=None, **kw) -> LeafIndex:
+    """BHL-tree semantics: batch update = full rebuild."""
+    old, ok = _live_flat(index)
+    if new_mask is None:
+        new_mask = jnp.ones(new_pts.shape[0], bool)
     pts = jnp.concatenate([old, new_pts.astype(old.dtype)], axis=0)
-    mask = jnp.concatenate([ok, jnp.ones(new_pts.shape[0], bool)])
+    mask = jnp.concatenate([ok, new_mask])
     return kd_build(pts, mask, phi=index.phi, **kw)
 
 
@@ -164,12 +171,10 @@ def multiset_subtract_mask(live_pts, live_ok, del_pts, del_ok=None):
     return keep[:n]
 
 
-def kd_delete(index: LeafIndex, del_pts, **kw) -> LeafIndex:
+def kd_delete(index: LeafIndex, del_pts, del_mask=None, **kw) -> LeafIndex:
     """Full rebuild without the deleted multiset (rank-matched)."""
-    R, C, dim = index.pts.shape
-    old = index.pts.reshape(R * C, dim)
-    ok = (index.valid & index.active[:, None]).reshape(R * C)
-    keep = multiset_subtract_mask(old, ok, del_pts)
+    old, ok = _live_flat(index)
+    keep = multiset_subtract_mask(old, ok, del_pts, del_mask)
     return kd_build(old, keep, phi=index.phi, **kw)
 
 
@@ -219,22 +224,20 @@ def zd_build(points, mask=None, *, phi: int = 32, bits: int = 15,
     return _finalize_groups(pts, ok, fkey, phi, capacity_rows)
 
 
-def zd_insert(index: LeafIndex, new_pts, **kw) -> LeafIndex:
+def zd_insert(index: LeafIndex, new_pts, new_mask=None, **kw) -> LeafIndex:
     """Merge-rebuild update (labeled as such in benchmarks — the original
     Zd update algorithm is not reproduced here; this baseline isolates the
     construction-cost claim)."""
-    R, C, dim = index.pts.shape
-    old = index.pts.reshape(R * C, dim)
-    ok = (index.valid & index.active[:, None]).reshape(R * C)
+    old, ok = _live_flat(index)
+    if new_mask is None:
+        new_mask = jnp.ones(new_pts.shape[0], bool)
     pts = jnp.concatenate([old, new_pts.astype(old.dtype)], axis=0)
-    mask = jnp.concatenate([ok, jnp.ones(new_pts.shape[0], bool)])
+    mask = jnp.concatenate([ok, new_mask])
     return zd_build(pts, mask, phi=index.phi, **kw)
 
 
-def zd_delete(index: LeafIndex, del_pts, **kw) -> LeafIndex:
+def zd_delete(index: LeafIndex, del_pts, del_mask=None, **kw) -> LeafIndex:
     """Merge-rebuild without the deleted multiset (rank-matched)."""
-    R, C, dim = index.pts.shape
-    old = index.pts.reshape(R * C, dim)
-    ok = (index.valid & index.active[:, None]).reshape(R * C)
-    keep = multiset_subtract_mask(old, ok, del_pts)
+    old, ok = _live_flat(index)
+    keep = multiset_subtract_mask(old, ok, del_pts, del_mask)
     return zd_build(old, keep, phi=index.phi, **kw)

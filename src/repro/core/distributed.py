@@ -118,8 +118,12 @@ def _route_exchange(pts, mask, splitters, axis, n_shards: int, cap: int,
 
 
 def _smap(fn, mesh, in_specs, out_specs):
-    return shard_map(fn, mesh=mesh, in_specs=in_specs,
-                     out_specs=out_specs, check_vma=False)
+    try:
+        return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+    except TypeError:  # jax < 0.6 spells the replication check check_rep
+        return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
 
 
 # ----------------------------------------------------------------- build
@@ -177,7 +181,8 @@ def _update(index: DistIndex, pts, mask, mesh, op: str, slack: float):
             p, k, index.splitters, axis, n_shards, cap,
             meta["curve"], meta["bits"], meta["coord_bits"])
         if op == "insert":
-            tree = spac.insert(tree, rp, rm)
+            tree = spac.insert(tree, rp, rm, max_overflow_rows=min(
+                64, tree.capacity_rows))
         else:
             tree = spac.delete(tree, rp, rm)
         return _stack(tree), dropped
@@ -212,7 +217,7 @@ def knn(index: DistIndex, qpts, k: int, mesh, chunk: int = 8):
     def local(tree, q):
         tree = _unstack(tree)
         view = tree.view()
-        d2, ids = Q.knn(view, q, k, chunk)
+        d2, ids = Q.knn_impl(view, q, k, chunk)
         pts = Q.gather_points(view, ids)
         d2 = jnp.where(ids >= 0, d2, BIG)
         all_d2 = jax.lax.all_gather(d2, axis)     # (S, Q, k)
@@ -235,7 +240,7 @@ def range_count(index: DistIndex, lo, hi, mesh, max_rows: int = 128):
 
     def local(tree, lo, hi):
         tree = _unstack(tree)
-        cnt, trunc = Q.range_count(tree.view(), lo, hi, max_rows)
+        cnt, trunc = Q.range_count_impl(tree.view(), lo, hi, max_rows)
         return (jax.lax.psum(cnt, axis),
                 jax.lax.psum(trunc.astype(jnp.int32), axis) > 0)
 

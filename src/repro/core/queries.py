@@ -84,6 +84,13 @@ def _knn_single(view: LeafView, q, k: int, chunk: int):
     return best_d2, best_id
 
 
+def knn_impl(view: LeafView, queries, k: int, chunk: int = 8):
+    """Unjitted :func:`knn` — use inside shard_map/pjit regions (a nested
+    ``jax.jit`` around the vmapped while_loop miscompiles under shard_map
+    on some jax versions; inner jit is a no-op there anyway)."""
+    return jax.vmap(lambda q: _knn_single(view, q, k, chunk))(queries)
+
+
 @functools.partial(jax.jit, static_argnums=(2, 3))
 def knn(view: LeafView, queries, k: int, chunk: int = 8):
     """Exact batched k-nearest-neighbors.
@@ -91,7 +98,7 @@ def knn(view: LeafView, queries, k: int, chunk: int = 8):
     queries: (Q, D). Returns (d2 (Q, k) ascending, flat ids (Q, k) = row*C+slot,
     -1 padded when fewer than k points exist).
     """
-    return jax.vmap(lambda q: _knn_single(view, q, k, chunk))(queries)
+    return knn_impl(view, queries, k, chunk)
 
 
 def gather_points(view: LeafView, flat_ids):
@@ -128,14 +135,19 @@ def _range_count_single(view: LeafView, lo, hi, max_rows: int):
     return jnp.sum(inside, dtype=jnp.int32), truncated
 
 
+def range_count_impl(view: LeafView, lo, hi, max_rows: int = 128):
+    """Unjitted :func:`range_count` — use inside shard_map/pjit regions."""
+    return jax.vmap(lambda l, h: _range_count_single(view, l, h, max_rows))(
+        lo, hi)
+
+
 @functools.partial(jax.jit, static_argnums=(3,))
 def range_count(view: LeafView, lo, hi, max_rows: int = 128):
     """Exact batched range-count. lo/hi: (Q, D) inclusive boxes.
 
     Returns (counts (Q,), truncated (Q,)); a True truncated flag means
     max_rows was too small for exactness (resize and re-run)."""
-    return jax.vmap(lambda l, h: _range_count_single(view, l, h, max_rows))(
-        lo, hi)
+    return range_count_impl(view, lo, hi, max_rows)
 
 
 def _range_list_single(view: LeafView, lo, hi, max_rows: int, cap: int):

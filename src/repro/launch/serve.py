@@ -26,8 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.core import queries as Q
-from repro.core import spac
+from repro.core import make_index
 from repro.data import points as gen
 from repro.models import transformer
 from repro.serve import ServeEngine
@@ -38,9 +37,11 @@ def serve_index(args):
     n, m = args.n, args.n // args.batches
     pts = gen.GENERATORS[args.dist](key, n, 2)
     t0 = time.time()
-    tree = spac.build(pts[: n // 2], phi=32,
-                      capacity_rows=4 * (n // 32) + 64)
-    jax.block_until_ready(tree.pts)
+    # serving mode: lifetime capacity up front, buffer donation per update,
+    # jit-cached fixed-shape update closures (no retracing, no overflow
+    # handling in the service loop)
+    idx = make_index(args.kind, pts[: n // 2], phi=32, capacity_points=n,
+                     donate=True).block_until_ready()
     t_build = time.time() - t0
 
     qk = jax.random.split(key, 3)
@@ -50,23 +51,21 @@ def serve_index(args):
     for b in range((n // 2) // m):
         batch = pts[n // 2 + b * m: n // 2 + (b + 1) * m]
         t0 = time.time()
-        tree = spac.insert(tree, batch)
-        jax.block_until_ready(tree.pts)
+        idx = idx.insert(batch).block_until_ready()
         ins_t += time.time() - t0
-        assert not bool(tree.overflowed)
 
         t0 = time.time()
-        d2, ids = Q.knn(tree.view(), qpts, args.k)
+        d2, ids = idx.knn(qpts, args.k)
         jax.block_until_ready(d2)
         qry_t += time.time() - t0
         served += args.queries
 
         t0 = time.time()
-        tree = spac.delete(tree, batch[: m // 4])
-        jax.block_until_ready(tree.pts)
+        idx = idx.delete(batch[: m // 4]).block_until_ready()
         del_t += time.time() - t0
 
-    print(f"index service [{args.dist}] n={n}: build {t_build:.2f}s | "
+    print(f"index service [{args.dist}/{args.kind}] n={n}: "
+          f"build {t_build:.2f}s | "
           f"insert {ins_t:.2f}s ({(n // 2) / ins_t:,.0f} pts/s) | "
           f"delete {del_t:.2f}s | {served} kNN in {qry_t:.2f}s "
           f"({served / qry_t:,.0f} q/s)")
@@ -99,6 +98,8 @@ def main(argv=None):
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--dist", default="uniform",
                     choices=list(gen.GENERATORS))
+    ap.add_argument("--kind", default="spac-h",
+                    help="registered index backend (see repro.core)")
     # lm service
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--batch", type=int, default=4)

@@ -21,6 +21,8 @@ from repro.ft import (FaultTolerantLoop, HeartbeatMonitor, Snapshotter,
                       StragglerTracker)
 from repro.train.step import TrainCfg, init_train_state, make_train_step
 
+pytestmark = pytest.mark.slow  # training loops exceed the CI fast tier
+
 CFG = C.smoke("qwen1.5-0.5b").with_(act_dtype="float32")
 
 

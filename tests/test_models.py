@@ -18,6 +18,8 @@ from repro.models import encdec as ED
 from repro.models import transformer as T
 from repro.train.step import TrainCfg, init_train_state, make_train_step
 
+pytestmark = pytest.mark.slow  # full arch sweep exceeds the CI fast tier
+
 ARCHS = list(C.ARCHS)
 
 
