@@ -2,11 +2,16 @@
 
 Index construction goes through :func:`repro.core.make_index` — the same
 facade every example and test uses — so each figure script is a loop over
-``BENCH_KINDS`` x distributions with no per-family adapter code. CPU
-wall-times here are *relative* evidence (the paper's absolute numbers come
-from a 112-core Xeon); the claims we validate are ratios — e.g. SPaC vs the
-total-order CPAM baseline, P-Orth vs the Zd-style presort — which are
-hardware-portable because both sides run the same JAX/XLA substrate.
+``BENCH_KINDS`` x distributions with no per-family adapter code. Queries
+go through the facade's :class:`repro.core.engine.QueryEngine`, so
+timed results are exact by construction (no hand-sized ``max_rows``/
+``cap``, no silently-truncated answers); ``timed``'s warmup pass also
+lets the engine converge its buffer buckets so escalation re-runs never
+land inside a timed rep. CPU wall-times here are *relative* evidence
+(the paper's absolute numbers come from a 112-core Xeon); the claims we
+validate are ratios — e.g. SPaC vs the total-order CPAM baseline,
+P-Orth vs the Zd-style presort — which are hardware-portable because
+both sides run the same JAX/XLA substrate.
 """
 
 from __future__ import annotations

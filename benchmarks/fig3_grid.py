@@ -20,7 +20,6 @@ import functools
 import json
 
 import jax
-import jax.numpy as jnp
 
 from repro.data.points import query_boxes
 
@@ -60,9 +59,8 @@ def run(n=50_000, nq=500, ratios=(0.1, 0.01), indexes=None, phi=32,
                 if r == ratios[-1]:
                     rec["knn_ind"], _ = common.timed(idx2.knn, ind_q, knn_k)
                     rec["knn_ood"], _ = common.timed(idx2.knn, ood_q, knn_k)
-                    rec["range_cnt"], (cnt, trunc) = common.timed(
-                        idx2.range_count, lo, hi, 512)
-                    rec["trunc"] = int(jnp.sum(trunc))
+                    rec["range_cnt"], cnt = common.timed(
+                        idx2.range_count, lo, hi)
                 # incremental delete at this ratio
                 total = 0.0
                 idx3 = idx2 if r == ratios[-1] else build(pts)
@@ -103,8 +101,8 @@ def validate(out, ratios=(0.1, 0.01)):
             z = out[(dist, "zd")]["build"]
             checks.append((f"{dist}: P-Orth build faster than Zd presort",
                            z / p, z / p > 1.0 or dist == "varden"))
-        if ("uniform", "kd") in out:
-            sk = out[(dist, "spac-h")].get("knn_ind")
+        if ("uniform", "kd") in out and (dist, "porth") in out:
+            sk = out.get((dist, "spac-h"), {}).get("knn_ind")
             pk = out[(dist, "porth")].get("knn_ind")
             if sk and pk:
                 checks.append((f"{dist}: space-partitioning kNN <= R-tree "

@@ -3,20 +3,28 @@ incremental insertion — validates that query cost grows sub-linearly
 with k and the Hilbert/Morton and space-partitioning/R-tree orderings
 hold across k.
 
+``--json`` additionally sweeps the engine's forced impls (frontier
+traversal vs flat brute-force scan) and records q/s per
+(backend, impl) under ``results/`` — the bench trajectory baseline.
+
 Run:  PYTHONPATH=src python -m benchmarks.fig4_knn --n 50000
+      PYTHONPATH=src python -m benchmarks.fig4_knn --n 20000 --json
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 
 from . import common
 
 KS = (1, 10, 100)
+IMPLS = ("auto", "frontier", "flat")
 
 
 def run(n=50_000, nq=500, dist="varden", indexes=None, phi=32,
-        batch_ratio=0.01, verbose=True):
+        batch_ratio=0.01, verbose=True, impls=("auto",)):
     names = indexes or ["porth", "spac-h", "spac-z", "kd", "zd"]
     pts = common.points_for(dist, n)
     ind_q, ood_q = common.knn_queries(dist, nq)
@@ -29,9 +37,13 @@ def run(n=50_000, nq=500, dist="varden", indexes=None, phi=32,
         for b in range(steps):
             idx = idx.insert(pts[n // 2 + b * m: n // 2 + (b + 1) * m])
         rec = {}
-        for k in KS:
-            rec[f"ind_k{k}"], _ = common.timed(idx.knn, ind_q, k)
-            rec[f"ood_k{k}"], _ = common.timed(idx.knn, ood_q, k)
+        for impl in impls:
+            tag = "" if impl == "auto" else f"{impl}_"
+            for k in KS:
+                rec[f"{tag}ind_k{k}"], _ = common.timed(
+                    idx.knn, ind_q, k, impl=impl)
+                rec[f"{tag}ood_k{k}"], _ = common.timed(
+                    idx.knn, ood_q, k, impl=impl)
         out[name] = rec
         if verbose:
             print(common.fmt_row(name, [rec[f"ind_k{k}"] for k in KS]
@@ -40,15 +52,40 @@ def run(n=50_000, nq=500, dist="varden", indexes=None, phi=32,
     return out
 
 
+def qps_records(out, nq: int, impls=IMPLS):
+    """Flatten run() output to q/s per (backend, impl, k, workload)."""
+    recs = {}
+    for name, rec in out.items():
+        for impl in impls:
+            tag = "" if impl == "auto" else f"{impl}_"
+            recs.setdefault(name, {})[impl] = {
+                f"{side}_k{k}": nq / rec[f"{tag}{side}_k{k}"]
+                for side in ("ind", "ood") for k in KS
+                if rec.get(f"{tag}{side}_k{k}")}
+    return recs
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=50_000)
     ap.add_argument("--nq", type=int, default=500)
     ap.add_argument("--dist", default="varden")
+    ap.add_argument("--json", nargs="?", const="results/fig4_knn.json",
+                    default=None, metavar="PATH",
+                    help="also sweep forced impls and write q/s per "
+                         "(backend, impl) as json")
     args = ap.parse_args()
+    impls = IMPLS if args.json else ("auto",)
     print(common.fmt_row("index", [f"InD k={k}" for k in KS]
                          + [f"OOD k={k}" for k in KS]))
-    run(n=args.n, nq=args.nq, dist=args.dist)
+    out = run(n=args.n, nq=args.nq, dist=args.dist, impls=impls)
+    if args.json:
+        payload = dict(n=args.n, nq=args.nq, dist=args.dist,
+                       qps=qps_records(out, args.nq, impls))
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"wrote q/s per (backend, impl) -> {args.json}")
 
 
 if __name__ == "__main__":

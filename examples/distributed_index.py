@@ -55,7 +55,7 @@ def main():
 
     lo = jnp.array([[0, 0]], jnp.int32)
     hi = jnp.array([[1 << 19, 1 << 19]], jnp.int32)
-    cnt, trunc = idx.range_count(lo, hi, max_rows=2048)
+    cnt = idx.range_count(lo, hi)   # exact: engine escalates per-shard
     print(f"distributed range count: {int(cnt[0])}")
 
 

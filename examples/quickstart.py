@@ -29,15 +29,24 @@ idx = idx.delete(pts[:1_000])        # parallel batch delete
 print(f"after +2000/-1000: {len(idx)} points")
 
 # -------------------------------------------------------------- queries
+# Queries are exact by default: the engine sizes its own buffers (no
+# max_rows/cap/truncated on this surface) and `impl="auto"` routes each
+# kNN to the Pallas brute-force kernel when the index fits a flat scan,
+# or to the chunked frontier traversal otherwise.
 qpts = gen.uniform(jax.random.PRNGKey(2), 100, dim=2)
 d2, nbrs, ok = idx.knn_points(qpts, k=10)            # exact batched kNN
 print(f"10-NN of first query: d2={d2[0, :3]}... -> {nbrs[0, 0]}")
 
+# forcing an impl pins the route (auto picks by index size):
+d2_fr, _ = idx.knn(qpts, k=10, impl="frontier")      # tree traversal
+d2_bf, _ = idx.knn(qpts, k=10, impl="ref")           # flat scan (jnp)
+assert bool(jnp.allclose(d2_fr, d2_bf))              # both exact
+print("frontier and brute-force impls agree")
+
 lo = jnp.array([[0, 0]], jnp.int32)
 hi = jnp.array([[1 << 18, 1 << 18]], jnp.int32)
-cnt, truncated = idx.range_count(lo, hi, max_rows=1024)
-print(f"range count in [0, 2^18)^2: {int(cnt[0])} (truncated="
-      f"{bool(truncated[0])})")
+cnt = idx.range_count(lo, hi)                        # exact, auto-sized
+print(f"range count in [0, 2^18)^2: {int(cnt[0])}")
 
 # ------------------------------------- other backends, same interface
 print("registered backends:", ", ".join(sorted(BACKENDS)))

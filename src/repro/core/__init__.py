@@ -9,7 +9,7 @@ Index API (the recommended entry point)
     idx = make_index("spac-h", points, phi=32)   # or porth/spac-z/kd/zd/...
     idx = idx.insert(batch).delete(stale)        # pure, auto-capacity
     d2, ids = idx.knn(queries, k=10)             # exact, batched
-    counts, _ = idx.range_count(lo, hi)
+    counts = idx.range_count(lo, hi)             # exact, auto-sized
 
 * **Registry** — ``index.BACKENDS`` maps kind -> :class:`index.Backend`;
   ``register_backend`` adds new families that every benchmark/test loop
@@ -23,6 +23,12 @@ Index API (the recommended entry point)
   ``(backend, batch shape, dtype, static params)``; a fixed-shape update
   stream compiles once. ``make_index(..., donate=True)`` additionally
   donates the old tree's buffers on each update (serving hot path).
+* **Query engine** — queries are exact by default: the per-index
+  :class:`engine.QueryEngine` auto-sizes the range buffers through
+  power-of-two buckets (``truncated`` never escapes the engine), caches
+  jitted query plans on ``(op, Q-shape, dtype, k/caps, impl)``, and
+  routes kNN between the Pallas brute-force kernel and the chunked
+  frontier traversal (``impl="auto"``, override per call).
 * **Distributed** — ``make_index(kind, pts, mesh=mesh)`` returns a
   :class:`index.DistributedIndex` sharded over the mesh with the same
   surface (spac-family kinds).
@@ -31,19 +37,23 @@ Low-level modules (power users / the paper's algorithms):
 
   * ``porth``   -- P-Orth tree (SFC-free parallel orth-tree, paper Sec. 3)
   * ``spac``    -- SPaC-tree family (parallel R-tree over SFC order, Sec. 4)
-  * ``queries`` -- shared exact batched kNN / range engine
+  * ``queries`` -- fixed-capacity batched kNN / range kernels
+  * ``engine``  -- exact-by-default query planner over those kernels
   * ``sfc``     -- Morton / Hilbert encodings
   * ``baselines`` -- kd-tree, Zd-like, CPAM-like comparison indexes
   * ``distributed`` -- shard_map-sharded index across a device mesh
 """
 
-from . import baselines, index, leafstore, porth, queries, sfc, spac  # noqa: F401
+from . import (baselines, engine, index, leafstore, porth,  # noqa: F401
+               queries, sfc, spac)
+from .engine import QueryEngine  # noqa: F401
 from .index import (BACKENDS, Backend, DistributedIndex,  # noqa: F401
                     SpatialIndex, capacity_for, get_backend, make_index,
                     register_backend)
 
 __all__ = [
-    "BACKENDS", "Backend", "DistributedIndex", "SpatialIndex",
-    "baselines", "capacity_for", "get_backend", "index", "leafstore",
-    "make_index", "porth", "queries", "register_backend", "sfc", "spac",
+    "BACKENDS", "Backend", "DistributedIndex", "QueryEngine",
+    "SpatialIndex", "baselines", "capacity_for", "engine", "get_backend",
+    "index", "leafstore", "make_index", "porth", "queries",
+    "register_backend", "sfc", "spac",
 ]

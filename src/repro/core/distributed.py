@@ -209,15 +209,28 @@ def _tree_meta(index: DistIndex):
 
 # --------------------------------------------------------------- queries
 
-def knn(index: DistIndex, qpts, k: int, mesh, chunk: int = 8):
+def knn(index: DistIndex, qpts, k: int, mesh, chunk: int = 8,
+        impl: str = "frontier", kernel: str = "auto"):
     """Exact distributed kNN. qpts: (Q, dim) replicated. Returns
-    (d2 (Q, k) ascending, points (Q, k, dim), valid (Q, k))."""
+    (d2 (Q, k) ascending, points (Q, k, dim), valid (Q, k)).
+
+    ``impl="frontier"`` runs the chunked frontier traversal per shard;
+    ``impl="flat"`` the brute-force scan (``kernel`` picks the knn
+    kernel flavor: auto/pallas/interpret/ref). Both use the unjitted
+    ``_impl`` spellings — required inside shard_map (miscompile note in
+    ROADMAP.md)."""
+    from ..kernels.knn import ops as knn_ops
     axis = index.axis
 
     def local(tree, q):
         tree = _unstack(tree)
         view = tree.view()
-        d2, ids = Q.knn_impl(view, q, k, chunk)
+        if impl == "frontier":
+            d2, ids = Q.knn_impl(view, q, k, chunk)
+        else:
+            flat_pts, flat_ok = Q.flatten_view(view)
+            d2, ids = knn_ops.knn_bruteforce_impl(q, flat_pts, flat_ok,
+                                                  k=k, impl=kernel)
         pts = Q.gather_points(view, ids)
         d2 = jnp.where(ids >= 0, d2, BIG)
         all_d2 = jax.lax.all_gather(d2, axis)     # (S, Q, k)

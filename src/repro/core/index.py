@@ -57,6 +57,7 @@ import jax
 import jax.numpy as jnp
 
 from . import baselines, porth, queries, spac
+from .engine import QueryEngine
 
 # Default root domain for orth-style backends on integer coordinates —
 # matches ``repro.data.points.DEFAULT_HI``. Pass ``root_lo``/``root_hi`` to
@@ -286,13 +287,14 @@ class SpatialIndex:
     """Immutable handle over one backend tree; updates return new handles.
 
     Construct via :func:`make_index`. All query methods delegate to the
-    shared exact engine in :mod:`repro.core.queries` through the backend's
-    ``LeafView``.
+    :class:`repro.core.engine.QueryEngine` through the backend's
+    ``LeafView``: exact by default (no ``max_rows``/``cap``/``truncated``
+    on this surface), jit-cached plans, ``impl="auto"`` kernel routing.
     """
 
     def __init__(self, kind: str, tree, *, phi: int, params: dict,
                  donate: bool = False, size_hint: int = 0,
-                 rebuild_rows: int = 0):
+                 rebuild_rows: int = 0, engine: QueryEngine | None = None):
         self.kind = kind
         self._backend = get_backend(kind)
         self._tree = tree
@@ -304,6 +306,9 @@ class SpatialIndex:
         # capacity stays sufficient)
         self._size_hint = size_hint
         self._rebuild_rows = rebuild_rows
+        # planning state (flat-scan budget, converged query buffers)
+        # rides along across functional updates
+        self._engine = engine if engine is not None else QueryEngine()
 
     # -- plumbing ----------------------------------------------------------
 
@@ -320,6 +325,7 @@ class SpatialIndex:
                           else size_hint)
         out._rebuild_rows = (self._rebuild_rows if rebuild_rows is None
                              else rebuild_rows)
+        out._engine = self._engine
         return out
 
     def _prep(self, pts, mask):
@@ -459,27 +465,40 @@ class SpatialIndex:
             return self._wrap(tree, rebuild_rows=rows)
         return self._wrap(self._run_update("delete", self._tree, pts, mask))
 
-    # -- queries -----------------------------------------------------------
+    # -- queries (exact by default; see repro.core.engine) -----------------
 
-    def knn(self, qpts, k: int, chunk: int = 8):
-        """Exact batched kNN -> (d2 (Q, k) ascending, flat ids (Q, k))."""
-        return queries.knn(self.view(), jnp.asarray(qpts), k, chunk)
+    @property
+    def engine(self) -> QueryEngine:
+        """The query planner riding along with this index (flat-scan
+        budget, converged buffer buckets)."""
+        return self._engine
 
-    def knn_points(self, qpts, k: int, chunk: int = 8):
+    def knn(self, qpts, k: int, *, impl: str = "auto"):
+        """Exact batched kNN -> (d2 (Q, k) ascending, flat ids (Q, k)).
+
+        ``impl``: "auto" (planner routes to the Pallas brute-force
+        kernel or the frontier traversal), or a forced spelling —
+        "frontier", "flat", "pallas", "pallas-interpret", "ref"."""
+        return self._engine.knn(self.view(), jnp.asarray(qpts), k,
+                                impl=impl)
+
+    def knn_points(self, qpts, k: int, *, impl: str = "auto"):
         """kNN returning coordinates: (d2, neighbor points, valid)."""
         view = self.view()
-        d2, ids = queries.knn(view, jnp.asarray(qpts), k, chunk)
+        d2, ids = self._engine.knn(view, jnp.asarray(qpts), k, impl=impl)
         return d2, queries.gather_points(view, ids), ids >= 0
 
-    def range_count(self, lo, hi, max_rows: int = 128):
-        """Exact batched range count -> (counts, truncated flags)."""
-        return queries.range_count(self.view(), jnp.asarray(lo),
-                                   jnp.asarray(hi), max_rows)
+    def range_count(self, lo, hi):
+        """Exact batched range count -> counts (Q,). No sizing knobs:
+        the engine escalates its row buffer until nothing truncates."""
+        return self._engine.range_count(self.view(), jnp.asarray(lo),
+                                        jnp.asarray(hi))
 
-    def range_list(self, lo, hi, max_rows: int = 128, cap: int = 512):
-        """Exact batched range report -> (ids, counts, truncated flags)."""
-        return queries.range_list(self.view(), jnp.asarray(lo),
-                                  jnp.asarray(hi), max_rows, cap)
+    def range_list(self, lo, hi):
+        """Exact batched range report -> (ids (Q, cap) padded with -1,
+        counts (Q,)); cap is auto-sized so every hit is present."""
+        return self._engine.range_list(self.view(), jnp.asarray(lo),
+                                       jnp.asarray(hi))
 
     def __repr__(self):
         return (f"SpatialIndex(kind={self.kind!r}, "
@@ -563,7 +582,8 @@ class DistributedIndex:
     globally); ``range_list`` is not offered distributed."""
 
     def __init__(self, kind: str, index, mesh, *, phi: int,
-                 slack: float = 2.0, build_kw: dict | None = None):
+                 slack: float = 2.0, build_kw: dict | None = None,
+                 engine: QueryEngine | None = None):
         self.kind = kind
         self._index = index
         self.mesh = mesh
@@ -572,6 +592,7 @@ class DistributedIndex:
         # everything needed to re-shard at a larger capacity (overflow
         # recovery keeps the facade's never-see-overflowed contract)
         self._build_kw = build_kw or {}
+        self._engine = engine if engine is not None else QueryEngine()
 
     @classmethod
     def build(cls, kind: str, points, mesh, *, mask=None, phi: int = 32,
@@ -625,7 +646,8 @@ class DistributedIndex:
 
     def _wrap(self, idx) -> "DistributedIndex":
         return DistributedIndex(self.kind, idx, self.mesh, phi=self.phi,
-                                slack=self.slack, build_kw=self._build_kw)
+                                slack=self.slack, build_kw=self._build_kw,
+                                engine=self._engine)
 
     @property
     def index(self):
@@ -715,17 +737,24 @@ class DistributedIndex:
             f"{self.kind} (distributed): delete batch still overflows "
             f"the routing slab at slack={slack}")
 
-    def knn(self, qpts, k: int, chunk: int = 8):
-        """Exact distributed kNN -> (d2, neighbor points, valid)."""
-        from . import distributed as D
-        return D.knn(self._index, jnp.asarray(qpts), k, self.mesh, chunk)
+    @property
+    def engine(self) -> QueryEngine:
+        return self._engine
+
+    def knn(self, qpts, k: int, *, impl: str = "auto"):
+        """Exact distributed kNN -> (d2, neighbor points, valid): the
+        engine routes each shard's local query (frontier vs flat scan)
+        and merges via top-k of per-shard top-k."""
+        return self._engine.knn_dist(self._index, jnp.asarray(qpts), k,
+                                     self.mesh, impl=impl)
 
     knn_points = knn
 
-    def range_count(self, lo, hi, max_rows: int = 128):
-        from . import distributed as D
-        return D.range_count(self._index, jnp.asarray(lo), jnp.asarray(hi),
-                             self.mesh, max_rows)
+    def range_count(self, lo, hi):
+        """Exact distributed range count -> counts (Q,): per-shard
+        counts + psum, row buffers escalated until no shard truncates."""
+        return self._engine.range_count_dist(
+            self._index, jnp.asarray(lo), jnp.asarray(hi), self.mesh)
 
     def block_until_ready(self) -> "DistributedIndex":
         jax.block_until_ready(self._index)

@@ -67,7 +67,11 @@ def _knn_single(view: LeafView, q, k: int, chunk: int):
         i, best_d2, best_id = state
         rows = jax.lax.dynamic_slice(row_order, (i * chunk,), (chunk,))
         pts = view.pts[rows]                      # (chunk, C, D)
-        ok = view.valid[rows] & view.active[rows][:, None]
+        # mask the tail padding of row_order (pad rows alias row 0 and
+        # would re-count its points when the loop reaches the last chunk)
+        pos = i * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        ok = (view.valid[rows] & view.active[rows][:, None]
+              & (pos < R)[:, None])
         diff = _f32(pts) - _f32(q)[None, None, :]
         d2 = jnp.sum(diff * diff, axis=-1)
         d2 = jnp.where(ok, d2, BIG).reshape(-1)
@@ -107,6 +111,15 @@ def gather_points(view: LeafView, flat_ids):
     safe = jnp.maximum(flat_ids, 0)
     pts = view.pts.reshape(R * C, dim)[safe]
     return jnp.where((flat_ids >= 0)[..., None], pts, 0)
+
+
+def flatten_view(view: LeafView):
+    """Flat (R*C, D) points + validity — the brute-force scan's
+    operands. The flat index equals row*C+slot, so ids from a flat kNN
+    scan and from the frontier traversal live in the same id space."""
+    R, C, dim = view.pts.shape
+    ok = (view.valid & view.active[:, None]).reshape(R * C)
+    return view.pts.reshape(R * C, dim), ok
 
 
 def _boxes_overlap(lo_a, hi_a, lo_b, hi_b):
@@ -166,7 +179,19 @@ def _range_list_single(view: LeafView, lo, hi, max_rows: int, cap: int):
     sel = jnp.argsort(key)[:cap]
     ids = jnp.where(flat_in[sel], flat_ids[sel], -1)
     count = jnp.sum(flat_in, dtype=jnp.int32)
-    return ids, count, truncated | (count > cap)
+    return ids, count, truncated
+
+
+def range_list_impl(view: LeafView, lo, hi, max_rows: int = 128,
+                    cap: int = 512):
+    """Unjitted range-report with the *row* truncation flag kept
+    separate from output-capacity overflow: (ids, counts, rows_trunc).
+
+    ``counts`` is exact whenever rows_trunc is False, even if it
+    exceeds ``cap`` — the engine escalates the two buffers
+    independently off these signals."""
+    return jax.vmap(
+        lambda l, h: _range_list_single(view, l, h, max_rows, cap))(lo, hi)
 
 
 @functools.partial(jax.jit, static_argnums=(3, 4))
@@ -175,5 +200,5 @@ def range_list(view: LeafView, lo, hi, max_rows: int = 128, cap: int = 512):
 
     Returns (ids (Q, cap) flat row*C+slot padded with -1, counts (Q,),
     truncated (Q,))."""
-    return jax.vmap(
-        lambda l, h: _range_list_single(view, l, h, max_rows, cap))(lo, hi)
+    ids, count, rows_trunc = range_list_impl(view, lo, hi, max_rows, cap)
+    return ids, count, rows_trunc | (count > cap)

@@ -8,10 +8,11 @@ from .kernel import knn_pallas
 from .ref import knn_ref
 
 
-@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_p",
-                                             "impl"))
-def knn_bruteforce(queries, points, ok, *, k: int, block_q: int = 128,
-                   block_p: int = 512, impl: str = "auto"):
+def knn_bruteforce_impl(queries, points, ok, *, k: int, block_q: int = 128,
+                        block_p: int = 512, impl: str = "auto"):
+    """Unjitted :func:`knn_bruteforce` — use inside shard_map/pjit
+    regions (nested ``jax.jit`` miscompiles there on some jax versions;
+    see the query-engine note in ROADMAP.md)."""
     if impl == "auto":
         impl = "pallas" if jax.default_backend() == "tpu" else "ref"
     if impl == "pallas":
@@ -21,3 +22,11 @@ def knn_bruteforce(queries, points, ok, *, k: int, block_q: int = 128,
         return knn_pallas(queries, points, ok, k=k, block_q=block_q,
                           block_p=block_p, interpret=True)
     return knn_ref(queries, points, ok, k=k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_q", "block_p",
+                                             "impl"))
+def knn_bruteforce(queries, points, ok, *, k: int, block_q: int = 128,
+                   block_p: int = 512, impl: str = "auto"):
+    return knn_bruteforce_impl(queries, points, ok, k=k, block_q=block_q,
+                               block_p=block_p, impl=impl)

@@ -43,7 +43,7 @@ from repro.launch.mesh import make_production_mesh
 from repro.models import encdec, transformer
 from repro.models.config import SHAPES, ModelCfg
 from repro.optim.adamw import adamw_init
-from repro.sharding import rules
+from repro.sharding import constraints, rules
 from repro.train.step import TrainCfg, make_train_step
 
 # Per-arch training knobs: microbatching bounds the remat-boundary
@@ -232,7 +232,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     mesh = make_production_mesh(multi_pod=multi_pod)
     # ambient mesh: activation sharding constraints in model code
     # (sharding/constraints.py) resolve against it
-    jax.sharding.set_mesh(mesh)
+    constraints.set_ambient_mesh(mesh)
     rec = dict(arch=arch, shape=shape_name,
                mesh="2x16x16" if multi_pod else "16x16",
                mode=shape.mode, ok=False)

@@ -46,8 +46,11 @@ def serve_index(args):
 
     qk = jax.random.split(key, 3)
     qpts = gen.GENERATORS[args.dist](qk[0], args.queries, 2)
-    ins_t = del_t = qry_t = 0.0
+    box_lo, box_hi = gen.query_boxes(qk[1], args.queries, 2,
+                                     gen.DEFAULT_HI // 16)
+    ins_t = del_t = qry_t = rng_t = 0.0
     served = 0
+    total_hits = 0
     for b in range((n // 2) // m):
         batch = pts[n // 2 + b * m: n // 2 + (b + 1) * m]
         t0 = time.time()
@@ -58,6 +61,15 @@ def serve_index(args):
         d2, ids = idx.knn(qpts, args.k)
         jax.block_until_ready(d2)
         qry_t += time.time() - t0
+
+        # exact by construction: the engine sizes its own buffers, so
+        # the served counts are trustworthy (pre-engine, `truncated`
+        # was silently dropped here and answers could be short)
+        t0 = time.time()
+        cnt = idx.range_count(box_lo, box_hi)
+        jax.block_until_ready(cnt)
+        rng_t += time.time() - t0
+        total_hits += int(cnt.sum())
         served += args.queries
 
         t0 = time.time()
@@ -68,7 +80,8 @@ def serve_index(args):
           f"build {t_build:.2f}s | "
           f"insert {ins_t:.2f}s ({(n // 2) / ins_t:,.0f} pts/s) | "
           f"delete {del_t:.2f}s | {served} kNN in {qry_t:.2f}s "
-          f"({served / qry_t:,.0f} q/s)")
+          f"({served / qry_t:,.0f} q/s) | {served} range in {rng_t:.2f}s "
+          f"({served / rng_t:,.0f} q/s, {total_hits} hits)")
 
 
 def serve_lm(args):

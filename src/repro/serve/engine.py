@@ -6,6 +6,11 @@ request batch is (prompts, n_new): prefill primes the cache for all
 slots at once, then decode steps run lock-step (the standard batched
 decode; slot-level continuous batching would swap finished slots —
 noted as future work, the cache layout already permits per-slot reset).
+
+This closure-caching pattern is the template the spatial-index side
+reuses: ``repro.core.index._update_closure`` (updates) and the query
+closures in ``repro.core.engine`` (the exact-by-default QueryEngine)
+key jitted closures on their static signature the same way.
 """
 
 from __future__ import annotations

@@ -9,8 +9,10 @@ FSDP resolution: gather the (small) weight shard, keep tokens sharded.
 
 All helpers no-op when no ambient mesh is set (single-device tests) and
 silently drop axes that don't exist or don't divide — the same model
-code runs everywhere. Launchers call ``jax.sharding.set_mesh(mesh)``
-(dryrun does it per cell).
+code runs everywhere. Launchers call :func:`set_ambient_mesh` (dryrun
+does it per cell), which spells ``jax.sharding.set_mesh`` on jax >= 0.5
+and falls back to the thread-resources mesh context on jax 0.4.x,
+where ``get_abstract_mesh``/``set_mesh`` don't exist yet.
 """
 
 from __future__ import annotations
@@ -22,8 +24,29 @@ TP = "model"
 BATCH_AXES = ("pod", "data")
 
 
+def _abstract_mesh():
+    """jax.sharding.get_abstract_mesh, shimmed for jax 0.4.x (where the
+    ambient mesh lives in the thread-resources env instead)."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        return get()
+    from jax._src import mesh as mesh_lib
+    m = getattr(mesh_lib.thread_resources.env, "physical_mesh", None)
+    return None if m is None or m.empty else m
+
+
+def set_ambient_mesh(mesh):
+    """Make ``mesh`` ambient for :func:`constrain` (version-portable
+    spelling of ``jax.sharding.set_mesh``). Process-lifetime: launcher
+    use only."""
+    if hasattr(jax.sharding, "set_mesh"):
+        jax.sharding.set_mesh(mesh)
+    else:  # jax 0.4.x: hold the Mesh context open for the process
+        mesh.__enter__()
+
+
 def _mesh():
-    am = jax.sharding.get_abstract_mesh()
+    am = _abstract_mesh()
     if am is None or not am.axis_names:
         return None
     return am

@@ -13,8 +13,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (BACKENDS, baselines, capacity_for, get_backend,
-                        make_index, porth, queries, spac)
+from repro.core import (BACKENDS, baselines, capacity_for, engine,
+                        get_backend, make_index, porth, queries, spac)
 
 PHI = 8
 N, M = 1200, 400
@@ -102,21 +102,31 @@ def test_facade_parity(kind):
     ref3 = direct_delete(kind, ref2, PTS[:200], idx3.capacity_rows)
     assert_trees_bitmatch(idx3.tree, ref3, kind, "delete")
 
-    d2_f, ids_f = idx3.knn(QS, 5)
-    d2_r, ids_r = queries.knn(ref3.view(), QS, 5)
+    # facade kNN = canonically-ordered direct engine call (the facade
+    # sorts each query's hits by (d2, id) so impls are comparable)
+    d2_f, ids_f = idx3.knn(QS, 5, impl="frontier")
+    d2_r, ids_r = engine.canonical_knn(*queries.knn(ref3.view(), QS, 5))
     np.testing.assert_array_equal(np.asarray(d2_f), np.asarray(d2_r))
     np.testing.assert_array_equal(np.asarray(ids_f), np.asarray(ids_r))
 
     lo = QS
     hi = QS + jnp.int32(1 << 17)
-    cnt_f, tr_f = idx3.range_count(lo, hi, max_rows=1024)
+    cnt_f = idx3.range_count(lo, hi)
     cnt_r, tr_r = queries.range_count(ref3.view(), lo, hi, max_rows=1024)
+    assert not bool(jnp.any(tr_r))
     np.testing.assert_array_equal(np.asarray(cnt_f), np.asarray(cnt_r))
-    ids_lf, c_lf, _ = idx3.range_list(lo, hi, max_rows=1024, cap=256)
-    ids_lr, c_lr, _ = queries.range_list(ref3.view(), lo, hi,
-                                         max_rows=1024, cap=256)
-    np.testing.assert_array_equal(np.asarray(ids_lf), np.asarray(ids_lr))
+    ids_lf, c_lf = idx3.range_list(lo, hi)
+    ids_lr, c_lr, tr_l = queries.range_list(ref3.view(), lo, hi,
+                                            max_rows=1024, cap=256)
+    assert not bool(jnp.any(tr_l))
     np.testing.assert_array_equal(np.asarray(c_lf), np.asarray(c_lr))
+    # same hits in the same (ascending flat-id) order; facade width is
+    # the engine's auto-sized bucket, padded with -1 past the count
+    for qi in range(QS.shape[0]):
+        c = int(c_lr[qi])
+        np.testing.assert_array_equal(np.asarray(ids_lf[qi, :c]),
+                                      np.asarray(ids_lr[qi, :c]))
+        assert (np.asarray(ids_lf[qi, c:]) == -1).all()
 
 
 @pytest.mark.parametrize("kind", ["porth", "spac-h", "spac-z"])
