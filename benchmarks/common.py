@@ -77,6 +77,17 @@ def knn_queries(dist: str, nq: int, seed: int = 9, dim: int = 2):
     return ind, ood
 
 
+def write_json(path: str, payload: dict, what: str) -> None:
+    """One baseline-writing recipe for every ``--json`` flag, so the
+    committed ``results/*.json`` files share a stable shape."""
+    import json
+    import os
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    print(f"wrote {what} -> {path}")
+
+
 def fmt_row(name, cells, w=9):
     return name.ljust(10) + " ".join(
         (f"{c:{w}.3f}" if isinstance(c, float) else str(c).rjust(w))

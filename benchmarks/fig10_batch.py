@@ -3,7 +3,12 @@
 Validates near-linear scaling of one batch update with batch size (the
 paper's O(m log n) work bound) and the SPaC vs P-Orth ordering.
 
+``--json`` records update throughput (points/s) per (backend, op,
+batch ratio) under ``results/`` — mirrors ``fig4_knn.py --json``, the
+bench trajectory baseline.
+
 Run:  PYTHONPATH=src python -m benchmarks.fig10_batch --n 100000
+      PYTHONPATH=src python -m benchmarks.fig10_batch --n 50000 --json
 """
 
 from __future__ import annotations
@@ -36,14 +41,32 @@ def run(n=100_000, dist="uniform", indexes=None, phi=32, verbose=True):
     return out
 
 
+def throughput_records(out, n: int):
+    """Flatten run() output to update points/s per (backend, op,
+    ratio) — the fig4_knn.py --json shape."""
+    return {name: {key: max(int(n * r), 64) / rec[key]
+                   for r in RATIOS
+                   for key in (f"ins_{r}", f"del_{r}")}
+            for name, rec in out.items()}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=100_000)
     ap.add_argument("--dist", default="uniform")
+    ap.add_argument("--json", nargs="?", const="results/fig10_batch.json",
+                    default=None, metavar="PATH",
+                    help="write update points/s per (backend, op, ratio)")
     args = ap.parse_args()
     print(common.fmt_row("index", [f"ins {r}" for r in RATIOS]
                          + [f"del {r}" for r in RATIOS]))
-    run(n=args.n, dist=args.dist)
+    out = run(n=args.n, dist=args.dist)
+    if args.json:
+        common.write_json(
+            args.json,
+            dict(n=args.n, dist=args.dist,
+                 update_pts_per_s=throughput_records(out, args.n)),
+            "update points/s per (backend, op, ratio)")
 
 
 if __name__ == "__main__":

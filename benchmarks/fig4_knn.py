@@ -14,8 +14,6 @@ Run:  PYTHONPATH=src python -m benchmarks.fig4_knn --n 50000
 from __future__ import annotations
 
 import argparse
-import json
-import os
 
 from . import common
 
@@ -80,12 +78,10 @@ def main():
                          + [f"OOD k={k}" for k in KS]))
     out = run(n=args.n, nq=args.nq, dist=args.dist, impls=impls)
     if args.json:
-        payload = dict(n=args.n, nq=args.nq, dist=args.dist,
-                       qps=qps_records(out, args.nq, impls))
-        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=1, sort_keys=True)
-        print(f"wrote q/s per (backend, impl) -> {args.json}")
+        common.write_json(args.json,
+                          dict(n=args.n, nq=args.nq, dist=args.dist,
+                               qps=qps_records(out, args.nq, impls)),
+                          "q/s per (backend, impl)")
 
 
 if __name__ == "__main__":

@@ -4,7 +4,12 @@ Claim validated: for large ranges, emitting the result list dominates
 and the gap between index families shrinks (range queries are less
 index-sensitive than kNN).
 
+``--json`` records q/s and mean output size per (backend, box side)
+under ``results/`` — mirrors ``fig4_knn.py --json``, the bench
+trajectory baseline.
+
 Run:  PYTHONPATH=src python -m benchmarks.fig5_range --n 50000
+      PYTHONPATH=src python -m benchmarks.fig5_range --n 20000 --json
 """
 
 from __future__ import annotations
@@ -44,15 +49,32 @@ def run(n=50_000, nq=200, dist="uniform", indexes=None, phi=32,
     return out
 
 
+def qps_records(out, nq: int):
+    """Flatten run() output to q/s + mean output size per (backend,
+    side) — the fig4_knn.py --json shape."""
+    return {name: {f"side_{s}": {"qps": nq / rec[f"side_{s}"],
+                                 "avg_out": rec[f"out_{s}"]}
+                   for s in SIDES}
+            for name, rec in out.items()}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=50_000)
     ap.add_argument("--nq", type=int, default=200)
     ap.add_argument("--dist", default="uniform")
+    ap.add_argument("--json", nargs="?", const="results/fig5_range.json",
+                    default=None, metavar="PATH",
+                    help="write q/s + avg output per (backend, side)")
     args = ap.parse_args()
     print(common.fmt_row("index", [f"t side={s}" for s in SIDES]
                          + [f"avg out s={s}" for s in SIDES]))
-    run(n=args.n, nq=args.nq, dist=args.dist)
+    out = run(n=args.n, nq=args.nq, dist=args.dist)
+    if args.json:
+        common.write_json(args.json,
+                          dict(n=args.n, nq=args.nq, dist=args.dist,
+                               qps=qps_records(out, args.nq)),
+                          "q/s per (backend, side)")
 
 
 if __name__ == "__main__":

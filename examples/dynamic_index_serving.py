@@ -1,18 +1,18 @@
-"""End-to-end driver: a dynamic spatial-index service under live load.
+"""End-to-end example: the versioned serving runtime under live load.
 
-This is the paper's target workload as a service: an index absorbing
-batched updates with low latency while serving kNN + range queries —
-measured here as sustained update/query throughput over many epochs
-(the paper's "incremental" dynamic setting, Sec. 5.1).
-
-The service runs on the `SpatialIndex` facade in serving mode:
-`donate=True` releases the old tree's buffers into each update, the
-jit-cached update closures guarantee the fixed-shape hot path never
-retraces, and capacity management is automatic (an overflow triggers
-the facade's grow -> retry -> compact ladder instead of an assert).
+The paper's target workload — batched updates landing at low latency
+while kNN/range queries keep being answered — through
+:mod:`repro.serving` instead of the old barrier loop: per epoch the
+example (1) snapshots the current version, (2) *dispatches* the epoch's
+delete+insert without waiting (versions go in flight on device),
+(3) answers a stream of single-query requests against the snapshot via
+the :class:`MicroBatcher` (coalesced into pow2-padded batches that hit
+the QueryEngine's cached plans, overlapping the in-flight updates), and
+(4) ``commit()``s — the only barrier, whose wall time is the update
+stall the queries failed to hide.
 
     PYTHONPATH=src python examples/dynamic_index_serving.py \
-        [--n 200000] [--dist varden] [--kind spac-h]
+        [--n 200000] [--scenario moving-objects] [--kind spac-h]
 """
 
 import argparse
@@ -20,81 +20,86 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import make_index
 from repro.data import points as gen
+from repro.serving import LatencyRecorder, MicroBatcher, SpatialServer
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n", type=int, default=200_000)
-    ap.add_argument("--dist", default="uniform",
-                    choices=list(gen.GENERATORS))
+    ap.add_argument("--scenario", default="uniform",
+                    choices=list(gen.SCENARIOS))
     ap.add_argument("--kind", default="spac-h")
     ap.add_argument("--epochs", type=int, default=20)
+    ap.add_argument("--warmup", type=int, default=2)
     ap.add_argument("--queries", type=int, default=512)
     ap.add_argument("--k", type=int, default=10)
     args = ap.parse_args()
 
-    n = args.n
-    m = n // (2 * args.epochs)
-    key = jax.random.PRNGKey(0)
-    stream = gen.GENERATORS[args.dist](key, n, 2)
-    qk1, qk2 = jax.random.split(jax.random.PRNGKey(9))
-    ind_q = gen.GENERATORS[args.dist](qk1, args.queries, 2)
-    box_lo, box_hi = gen.query_boxes(qk2, args.queries, 2,
-                                     gen.DEFAULT_HI // 64)
-
+    epochs = args.warmup + args.epochs
+    trace = gen.make_trace(args.scenario, n=args.n,
+                           batch=args.n // (2 * epochs), steps=epochs)
     t0 = time.time()
-    # capacity_points sizes rows for the lifetime maximum up front;
-    # donate=True hands the old tree's buffers to each update step
-    idx = make_index(args.kind, stream[: n // 2], phi=32,
-                     capacity_points=n, donate=True)
-    idx.block_until_ready()
-    print(f"bootstrap build: {n // 2} pts in {time.time() - t0:.2f}s")
+    # capacity sized for the trace's peak live points up front, so the
+    # serving loop never hits the grow->retry->compact ladder (and the
+    # server's deferred overflow check never replays)
+    srv = SpatialServer.build(args.kind, trace.bootstrap, phi=32,
+                              capacity_points=trace.max_live, window=4)
+    jax.block_until_ready(srv.head_index.tree)
+    print(f"bootstrap build: {trace.bootstrap.shape[0]} pts "
+          f"in {time.time() - t0:.2f}s")
 
-    ins_t = del_t = knn_t = rng_t = 0.0
-    n_knn = n_rng = 0
-    for e in range(args.epochs):
-        batch = stream[n // 2 + e * m: n // 2 + (e + 1) * m]
-        if batch.shape[0] < m:
-            break
-        t0 = time.time()
-        idx = idx.insert(batch).block_until_ready()
-        ins_t += time.time() - t0
+    qk1, qk2 = jax.random.split(jax.random.PRNGKey(9))
+    qpts = np.asarray(gen.uniform(qk1, args.queries, 2))
+    box_lo, box_hi = map(np.asarray, gen.query_boxes(
+        qk2, args.queries, 2, gen.DEFAULT_HI // 64))
 
-        t0 = time.time()
-        d2, ids = idx.knn(ind_q, args.k)
-        jax.block_until_ready(d2)
-        knn_t += time.time() - t0
-        n_knn += args.queries
+    rec = LatencyRecorder()
+    batcher = MicroBatcher(max_batch=args.queries, max_delay_s=0.05)
+    for e, step in enumerate(trace.steps):
+        if e == args.warmup:
+            rec.reset()   # drop jit compiles + engine bucket escalation
+        snap = srv.snapshot()            # pre-epoch version, isolated
+        batcher.target = snap
+        with rec.timer("delete", step.delete.shape[0]):
+            srv.delete(step.delete)      # async dispatch
+        with rec.timer("insert", step.insert.shape[0]):
+            srv.insert(step.insert)      # async dispatch
+        t1 = time.perf_counter()
+        tickets = [batcher.submit_knn(qpts[i], args.k)
+                   for i in range(args.queries)]
+        jax.block_until_ready([t.result() for t in tickets])
+        rec.record("knn", time.perf_counter() - t1, args.queries)
+        t1 = time.perf_counter()
+        tickets = [batcher.submit_range_count(box_lo[i], box_hi[i])
+                   for i in range(args.queries)]
+        jax.block_until_ready([t.result() for t in tickets])
+        rec.record("range", time.perf_counter() - t1, args.queries)
+        with rec.timer("commit"):        # exposed update stall
+            srv.commit()
 
-        t0 = time.time()
-        cnt = idx.range_count(box_lo, box_hi)   # exact: engine-sized
-        jax.block_until_ready(cnt)
-        rng_t += time.time() - t0
-        n_rng += args.queries
-
-        # churn: retire a quarter of this batch
-        t0 = time.time()
-        idx = idx.delete(batch[: m // 4]).block_until_ready()
-        del_t += time.time() - t0
-
-    size = len(idx)
-    print(f"[{args.dist}/{args.kind}] served {args.epochs} epochs, "
-          f"final size {size}")
-    print(f"  insert: {ins_t:6.2f}s  ({args.epochs * m / ins_t:>12,.0f}"
-          f" pts/s)")
-    print(f"  delete: {del_t:6.2f}s  ({args.epochs * m / 4 / del_t:>12,.0f}"
-          f" pts/s)")
-    print(f"  kNN   : {knn_t:6.2f}s  ({n_knn / knn_t:>12,.0f} q/s)")
-    print(f"  range : {rng_t:6.2f}s  ({n_rng / rng_t:>12,.0f} q/s)")
+    size = len(srv.head_index)
+    print(f"[{args.scenario}/{args.kind}] served {args.epochs} epochs "
+          f"(+{args.warmup} warmup), final size {size}, "
+          f"head version {srv.head_version}")
+    lat = rec.latency_summary()
+    for op in ("insert", "delete", "knn", "range", "commit"):
+        s = lat[op]
+        print(f"  {op:7s}: p50 {s['p50_ms']:8.2f}ms  "
+              f"p95 {s['p95_ms']:8.2f}ms  p99 {s['p99_ms']:8.2f}ms")
+    thr = rec.throughput(("knn", "range", "insert", "delete"))
+    print(f"  sustained: {thr['knn'] + thr['range']:,.0f} q/s, "
+          f"{thr['insert'] + thr['delete']:,.0f} update-pts/s "
+          f"(wall {rec.wall_s:.2f}s)")
 
     # correctness spot-check against brute force on the final state
+    idx = srv.head_index
     flat_pts, flat_ok = idx.extract_points()
     flat_pts = flat_pts.astype(jnp.float32)
-    q = ind_q[:8].astype(jnp.float32)
-    d2, _ = idx.knn(ind_q[:8], args.k)
+    q = jnp.asarray(qpts[:8], jnp.float32)
+    d2, _ = idx.knn(qpts[:8], args.k)
     diff = flat_pts[None] - q[:, None]
     bf = jnp.sort(jnp.where(flat_ok[None], jnp.sum(diff * diff, -1),
                             jnp.inf), axis=1)[:, : args.k]

@@ -3,9 +3,11 @@
 Subpackages (imported explicitly; nothing is pulled in eagerly here):
 
   * ``repro.core``  -- the spatial indexes + the unified Index API
-  * ``repro.data``  -- synthetic workloads and batch streams
+  * ``repro.data``  -- synthetic workloads, batch streams, update traces
+  * ``repro.serving`` -- versioned spatial serving runtime (snapshots,
+    micro-batching, latency-percentile workload driver)
   * ``repro.kernels`` / ``repro.launch`` / ``repro.serve`` -- accelerator
-    kernels, launch tooling, and the serving engine
+    kernels, launch tooling, and the LM serving engine
 """
 
 __version__ = "0.1.0"

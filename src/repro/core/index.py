@@ -453,6 +453,25 @@ class SpatialIndex:
             f"{self.kind}: insert of {pts.shape[0]} points still overflows "
             f"at capacity_rows={cap}")
 
+    def insert_unchecked(self, new_pts, new_mask=None) -> "SpatialIndex":
+        """Dispatch-only insert for the serving runtime: skips the
+        host-side ``overflowed`` read (a full device sync), so the call
+        returns as soon as the jit-cached update closure is enqueued and
+        queries against *older* versions can overlap with it on device.
+
+        The returned handle may carry a sticky ``overflowed`` flag; the
+        caller owns checking it at its next sync point —
+        :class:`repro.serving.SpatialServer` defers the check to
+        ``commit()`` and replays from the last good version on overflow.
+        Rebuild-style backends (kd/zd) fall back to the checked
+        :meth:`insert` (their size verification is inherently
+        synchronous)."""
+        if not self._backend.dynamic:
+            return self.insert(new_pts, new_mask)
+        pts, mask = self._prep(new_pts, new_mask)
+        return self._wrap(self._run_update("insert", self._tree, pts,
+                                           mask))
+
     def delete(self, del_pts, del_mask=None) -> "SpatialIndex":
         """Batch delete (exact multiset semantics; absent points no-op)."""
         pts, mask = self._prep(del_pts, del_mask)

@@ -8,11 +8,24 @@
 All generators are deterministic in (seed, shard) so a restarted job
 replays the exact same stream — required for fault-tolerant training/update
 pipelines (DESIGN.md Sec. 5).
+
+On top of the point generators, :func:`make_trace` builds deterministic
+mixed update *traces* for the serving runtime
+(:mod:`repro.serving.driver`): per-step (delete batch, insert batch)
+pairs over a bootstrap set. Scenarios are every ``GENERATORS`` entry
+(churn over the stream, the paper's incremental setting) plus two
+dynamic-workload shapes from ``TRACES``:
+
+* ``moving-objects`` — kinetic points: each step displaces a rotating
+  block of objects (delete the old positions, insert the displaced).
+* ``sliding-window`` — a stream window: each step inserts the head
+  batch of the stream and deletes the tail batch, holding size steady.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -66,6 +79,112 @@ def batches(seed: int, dist: str, n_total: int, batch: int, dim: int = 2,
     pts = GENERATORS[dist](key, n_total, dim, hi)
     for s in range(0, n_total, batch):
         yield pts[s: s + batch]
+
+
+class TraceStep(NamedTuple):
+    """One serving step: apply ``delete`` (may be None), then ``insert``
+    (may be None); queries interleave against the pre-step snapshot."""
+    delete: jnp.ndarray | None
+    insert: jnp.ndarray | None
+
+
+class Trace(NamedTuple):
+    """A deterministic mixed update workload for the serving runtime."""
+    bootstrap: jnp.ndarray        # initial index contents
+    steps: tuple[TraceStep, ...]  # replayed in order
+    max_live: int                 # peak live points (sizes capacity)
+
+
+def _trace_of(bootstrap, steps) -> Trace:
+    live = peak = int(bootstrap.shape[0])
+    for s in steps:
+        live += (0 if s.insert is None else int(s.insert.shape[0])) \
+            - (0 if s.delete is None else int(s.delete.shape[0]))
+        peak = max(peak, live)
+    return Trace(bootstrap, tuple(steps), peak)
+
+
+def trace_churn(dist: str, *, seed: int = 0, n: int, batch: int,
+                steps: int, dim: int = 2, hi: int = DEFAULT_HI) -> Trace:
+    """The paper's incremental setting as a trace: bootstrap ``n``
+    points from ``dist``, then per step insert the next stream batch and
+    retire a quarter of the *previous* batch (steps apply delete before
+    insert, so deleting from the current batch would be a no-op; step 0
+    retires from the bootstrap tail). Stream order carries the skew for
+    sweepline/varden, as in :func:`batches`."""
+    pts = GENERATORS[dist](jax.random.PRNGKey(seed), n + steps * batch,
+                           dim, hi)
+    prev = pts[max(n - batch, 0): n]
+    out = []
+    for s in range(steps):
+        ins = pts[n + s * batch: n + (s + 1) * batch]
+        out.append(TraceStep(delete=prev[: batch // 4], insert=ins))
+        prev = ins
+    return _trace_of(pts[:n], out)
+
+
+def trace_moving_objects(*, seed: int = 0, n: int, batch: int,
+                         steps: int, dim: int = 2, hi: int = DEFAULT_HI,
+                         disp: int = 2000) -> Trace:
+    """Kinetic points: ``n`` objects; each step a rotating block of
+    ``batch`` objects moves by a random displacement in [-disp, disp] —
+    the index sees delete(old positions) + insert(new positions), the
+    classic moving-objects update pattern."""
+    if batch > n:
+        raise ValueError(f"moving-objects needs batch <= n objects, got "
+                         f"batch={batch} > n={n}")
+    key = jax.random.PRNGKey(seed)
+    pos0 = uniform(key, n, dim, hi)
+    pos, out = pos0, []
+    for s in range(steps):
+        sel = (jnp.arange(batch) + s * batch) % n
+        old = pos[sel]
+        delta = jax.random.randint(jax.random.fold_in(key, s + 1),
+                                   (batch, dim), -disp, disp + 1,
+                                   dtype=jnp.int32)
+        new = jnp.clip(old + delta, 0, hi - 1)
+        pos = pos.at[sel].set(new)
+        out.append(TraceStep(delete=old, insert=new))
+    return _trace_of(pos0, out)
+
+
+def trace_sliding_window(*, seed: int = 0, n: int, batch: int,
+                         steps: int, dim: int = 2, hi: int = DEFAULT_HI,
+                         dist: str = "uniform") -> Trace:
+    """Stream window: bootstrap the first ``n`` stream points; step
+    ``s`` inserts the next ``batch`` at the head and deletes the oldest
+    ``batch`` from the tail, so the live set is a constant-size sliding
+    window over the stream."""
+    if batch > n:
+        raise ValueError(f"sliding-window needs batch <= n window "
+                         f"points, got batch={batch} > n={n}")
+    pts = GENERATORS[dist](jax.random.PRNGKey(seed), n + steps * batch,
+                           dim, hi)
+    out = [TraceStep(delete=pts[s * batch: (s + 1) * batch],
+                     insert=pts[n + s * batch: n + (s + 1) * batch])
+           for s in range(steps)]
+    return _trace_of(pts[:n], out)
+
+
+TRACES = {"moving-objects": trace_moving_objects,
+          "sliding-window": trace_sliding_window}
+
+# every scenario the workload driver can replay
+SCENARIOS = tuple(GENERATORS) + tuple(TRACES)
+
+
+def make_trace(scenario: str, *, seed: int = 0, n: int, batch: int,
+               steps: int, dim: int = 2, hi: int = DEFAULT_HI) -> Trace:
+    """Build the named scenario's trace: a ``GENERATORS`` name runs the
+    churn (incremental) pattern over that distribution; a ``TRACES``
+    name runs its dedicated dynamic-workload shape."""
+    if scenario in GENERATORS:
+        return trace_churn(scenario, seed=seed, n=n, batch=batch,
+                           steps=steps, dim=dim, hi=hi)
+    if scenario in TRACES:
+        return TRACES[scenario](seed=seed, n=n, batch=batch, steps=steps,
+                                dim=dim, hi=hi)
+    raise KeyError(f"unknown scenario {scenario!r}; one of {SCENARIOS}")
 
 
 def query_boxes(key, n: int, dim: int, side: int, hi: int = DEFAULT_HI):

@@ -2,10 +2,14 @@
 
 Two services behind one CLI:
 
-  * ``--service index`` — the paper's workload as a long-running
-    service: a dynamic spatial index absorbing batch updates while
-    answering kNN/range queries (the end-to-end driver for deliverable
-    (b); examples/dynamic_index_serving.py wraps this).
+  * ``--service index`` — a thin CLI over the versioned serving runtime
+    (:mod:`repro.serving`): snapshot-isolated queries pipelined against
+    async-dispatched updates, micro-batched through the QueryEngine's
+    cached plans, with per-op p50/p95/p99 from the workload driver.
+    The driver separates warmup from measured reps, so the reported
+    percentiles exclude jit compiles and the engine's pow2
+    bucket-escalation retraces (the old synchronous loop here timed
+    both into its first batch).
   * ``--service lm`` — batched LM serving (prefill + greedy decode) on
     a reduced config, exercising the same serve_step the dry-run lowers
     at production shapes.
@@ -26,62 +30,34 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.core import make_index
 from repro.data import points as gen
 from repro.models import transformer
 from repro.serve import ServeEngine
+from repro.serving import driver as serving_driver
 
 
 def serve_index(args):
-    key = jax.random.PRNGKey(args.seed)
-    n, m = args.n, args.n // args.batches
-    pts = gen.GENERATORS[args.dist](key, n, 2)
-    t0 = time.time()
-    # serving mode: lifetime capacity up front, buffer donation per update,
-    # jit-cached fixed-shape update closures (no retracing, no overflow
-    # handling in the service loop)
-    idx = make_index(args.kind, pts[: n // 2], phi=32, capacity_points=n,
-                     donate=True).block_until_ready()
-    t_build = time.time() - t0
-
-    qk = jax.random.split(key, 3)
-    qpts = gen.GENERATORS[args.dist](qk[0], args.queries, 2)
-    box_lo, box_hi = gen.query_boxes(qk[1], args.queries, 2,
-                                     gen.DEFAULT_HI // 16)
-    ins_t = del_t = qry_t = rng_t = 0.0
-    served = 0
-    total_hits = 0
-    for b in range((n // 2) // m):
-        batch = pts[n // 2 + b * m: n // 2 + (b + 1) * m]
-        t0 = time.time()
-        idx = idx.insert(batch).block_until_ready()
-        ins_t += time.time() - t0
-
-        t0 = time.time()
-        d2, ids = idx.knn(qpts, args.k)
-        jax.block_until_ready(d2)
-        qry_t += time.time() - t0
-
-        # exact by construction: the engine sizes its own buffers, so
-        # the served counts are trustworthy (pre-engine, `truncated`
-        # was silently dropped here and answers could be short)
-        t0 = time.time()
-        cnt = idx.range_count(box_lo, box_hi)
-        jax.block_until_ready(cnt)
-        rng_t += time.time() - t0
-        total_hits += int(cnt.sum())
-        served += args.queries
-
-        t0 = time.time()
-        idx = idx.delete(batch[: m // 4]).block_until_ready()
-        del_t += time.time() - t0
-
-    print(f"index service [{args.dist}/{args.kind}] n={n}: "
-          f"build {t_build:.2f}s | "
-          f"insert {ins_t:.2f}s ({(n // 2) / ins_t:,.0f} pts/s) | "
-          f"delete {del_t:.2f}s | {served} kNN in {qry_t:.2f}s "
-          f"({served / qry_t:,.0f} q/s) | {served} range in {rng_t:.2f}s "
-          f"({served / rng_t:,.0f} q/s, {total_hits} hits)")
+    """Replay the churn trace for (--dist, --kind) through the serving
+    runtime; ``--scenario`` picks any other registered trace shape."""
+    scenario = args.scenario or args.dist
+    # churn bootstraps half of --n and streams in the rest; for the
+    # dynamic shapes --n is the object/window count itself
+    n = args.n // 2 if scenario in gen.GENERATORS else args.n
+    cfg = serving_driver.DriverCfg(
+        n=n, batch=max(args.n // (2 * args.batches), 16),
+        steps=args.batches, warmup=min(2, max(args.batches // 2, 1)),
+        queries=args.queries, k=args.k, seed=args.seed)
+    payload = serving_driver.run(kinds=(args.kind,),
+                                 scenarios=(scenario,), cfg=cfg,
+                                 verbose=True)
+    res = payload["results"][args.kind][scenario]
+    thr = res["throughput"]
+    print(f"index service [{scenario}/{args.kind}] n={args.n}: "
+          f"build {res['build_s']:.2f}s | "
+          f"{thr['query_per_s']:,.0f} q/s | "
+          f"{thr['update_pts_per_s']:,.0f} update-pts/s | "
+          f"final size {res['final_size']} | "
+          f"recoveries {res['recoveries']}")
 
 
 def serve_lm(args):
@@ -113,6 +89,10 @@ def main(argv=None):
                     choices=list(gen.GENERATORS))
     ap.add_argument("--kind", default="spac-h",
                     help="registered index backend (see repro.core)")
+    ap.add_argument("--scenario", default=None,
+                    choices=list(gen.SCENARIOS),
+                    help="trace shape (default: churn over --dist); "
+                         "moving-objects / sliding-window etc.")
     # lm service
     ap.add_argument("--arch", default="qwen1.5-0.5b")
     ap.add_argument("--batch", type=int, default=4)

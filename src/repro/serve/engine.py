@@ -10,7 +10,13 @@ noted as future work, the cache layout already permits per-slot reset).
 This closure-caching pattern is the template the spatial-index side
 reuses: ``repro.core.index._update_closure`` (updates) and the query
 closures in ``repro.core.engine`` (the exact-by-default QueryEngine)
-key jitted closures on their static signature the same way.
+key jitted closures on their static signature the same way. The
+serving runtime closes the loop: ``repro.serving.MicroBatcher``
+coalesces ragged request streams into pow2-padded batches precisely so
+they land on those cached signatures, the way LM serving pads ragged
+prompts to fixed prefill shapes (slot-level continuous batching over a
+version window — ``repro.serving.SpatialServer`` — is the spatial
+analogue of the per-slot cache reset noted above).
 """
 
 from __future__ import annotations

@@ -1,0 +1,34 @@
+"""``repro.serving`` — the versioned spatial serving runtime.
+
+The paper's workload is *highly dynamic*: batch updates must land at
+low latency while queries keep being answered. This package is that
+setting as a runtime (ROADMAP "Serving runtime (PR 3)"):
+
+* :class:`SpatialServer` (``server``) — a versioned
+  :class:`repro.core.SpatialIndex`: snapshots are free (functional
+  trees), updates dispatch asynchronously so queries against version
+  ``v`` overlap version ``v+1``'s update on device, a bounded version
+  window gives backpressure, and ``commit()`` is the explicit barrier
+  with a deferred (replay-on-overflow) capacity check.
+* :class:`MicroBatcher` (``batcher``) — coalesces single kNN/range
+  requests into pow2-padded batches that hit the
+  :class:`repro.core.engine.QueryEngine`'s jit-cached plans (the
+  ``_update_closure`` signature-keying pattern); answers bit-match
+  per-request dispatch.
+* :mod:`driver` / :class:`LatencyRecorder` (``metrics``) — a workload
+  driver replaying deterministic mixed update/query traces
+  (``repro.data.points.make_trace``) and reporting per-op p50/p95/p99
+  plus sustained q/s and update-points/s.
+
+``python -m repro.serving.driver --smoke`` runs the whole stack on a
+tiny trace (the CI fast-tier smoke); ``launch/serve.py --service
+index`` and ``examples/dynamic_index_serving.py`` are thin frontends
+over this package.
+"""
+
+from .batcher import MicroBatcher, Ticket  # noqa: F401
+from .metrics import LatencyRecorder, summarize  # noqa: F401
+from .server import Snapshot, SpatialServer  # noqa: F401
+
+__all__ = ["LatencyRecorder", "MicroBatcher", "Snapshot",
+           "SpatialServer", "Ticket", "summarize"]

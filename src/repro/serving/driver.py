@@ -1,0 +1,225 @@
+"""Workload driver: replay deterministic mixed update/query traces
+through the serving runtime and report latency percentiles.
+
+Per (backend, scenario) the driver builds a :class:`SpatialServer`
+sized for the trace's peak live points, then replays the trace's steps
+in the pipelined serving pattern:
+
+1. take a snapshot of the current head version,
+2. dispatch the step's delete + insert (async — versions ``v+1``,
+   ``v+2`` go in flight; only the dispatch time is on the critical
+   path),
+3. answer the step's kNN and range requests **against the pre-step
+   snapshot** through the :class:`MicroBatcher` (requests arrive as
+   single-query submissions and coalesce into one pow2-padded batch per
+   op — their device work overlaps the in-flight updates),
+4. ``commit()`` — the only barrier; its wall time is the *exposed*
+   update stall, i.e. whatever the queries did not hide.
+
+Recorded ops: ``insert`` / ``delete`` (dispatch latency), ``knn`` /
+``range`` (request submit -> result, including device wait), ``commit``
+(exposed update stall). Warmup steps run the identical shapes first and
+are dropped, so jit compiles and the query engine's pow2
+bucket-escalation retraces never pollute a percentile (the
+first-timed-batch skew the old ``launch/serve.py`` loop had).
+
+Scenarios are ``repro.data.points.SCENARIOS``: churn over each point
+distribution (uniform / sweepline / varden) plus the dynamic shapes
+``moving-objects`` and ``sliding-window``.
+
+Run:
+  PYTHONPATH=src python -m repro.serving.driver --kinds porth,spac-h
+  PYTHONPATH=src python -m repro.serving.driver --smoke
+  PYTHONPATH=src python -m repro.serving.driver --json  # results/...
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from ..data import points as gen
+from .batcher import MicroBatcher
+from .metrics import LatencyRecorder
+from .server import SpatialServer
+
+DEFAULT_KINDS = ("porth", "spac-h")
+DEFAULT_JSON = "results/serve_latency.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class DriverCfg:
+    n: int = 20_000           # bootstrap / live-set size
+    batch: int = 512          # update batch per step
+    steps: int = 6            # measured steps
+    warmup: int = 2           # untimed steps (same shapes) dropped
+    queries: int = 64         # kNN + range requests per step
+    k: int = 10
+    box_frac: int = 64        # range boxes span DEFAULT_HI / box_frac
+    window: int = 4           # server version window
+    # admission knob: high default so flushes are size-triggered (one
+    # pow2 shape per op) and a timing-dependent split never compiles a
+    # fresh shape inside the measured window; lower it to trade
+    # throughput for per-request latency
+    max_delay_ms: float = 50.0
+    seed: int = 0
+    dim: int = 2
+    phi: int = 32
+
+
+def _query_stream(cfg: DriverCfg, scenario: str, step: int):
+    """Deterministic per-step query load: kNN points from the scenario's
+    distribution (uniform for the dynamic shapes) + range boxes."""
+    dist = scenario if scenario in gen.GENERATORS else "uniform"
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed + 7), step)
+    k1, k2 = jax.random.split(key)
+    qpts = gen.GENERATORS[dist](k1, cfg.queries, cfg.dim)
+    lo, hi = gen.query_boxes(k2, cfg.queries, cfg.dim,
+                             gen.DEFAULT_HI // cfg.box_frac)
+    # requests arrive as host-side rows (as they would off the wire);
+    # numpy slicing keeps per-submit overhead off the device
+    return np.asarray(qpts), np.asarray(lo), np.asarray(hi)
+
+
+def run_one(kind: str, scenario: str, cfg: DriverCfg,
+            verbose: bool = False) -> dict:
+    """Replay one (backend, scenario) trace; returns latency summary +
+    sustained throughput for the measured window."""
+    total = cfg.warmup + cfg.steps
+    trace = gen.make_trace(scenario, seed=cfg.seed, n=cfg.n,
+                           batch=cfg.batch, steps=total, dim=cfg.dim)
+    t0 = time.perf_counter()
+    srv = SpatialServer.build(kind, trace.bootstrap, phi=cfg.phi,
+                              capacity_points=trace.max_live,
+                              window=cfg.window)
+    jax.block_until_ready(srv.head_index.tree)
+    build_s = time.perf_counter() - t0
+    batcher = MicroBatcher(max_batch=cfg.queries,
+                           max_delay_s=cfg.max_delay_ms / 1e3)
+    rec = LatencyRecorder()
+    measured_updates = 0
+    for s, step in enumerate(trace.steps):
+        if s == cfg.warmup:
+            rec.reset()   # drop warmup: compiles + bucket escalations
+        snap = srv.snapshot()                       # pre-step version
+        batcher.target = snap
+        if step.delete is not None:
+            with rec.timer("delete", step.delete.shape[0]):
+                srv.delete(step.delete)             # async dispatch
+        if step.insert is not None:
+            with rec.timer("insert", step.insert.shape[0]):
+                srv.insert(step.insert)             # async dispatch
+        # micro-batched queries against the snapshot: single-query
+        # requests coalesce into one pow2-padded engine call per op,
+        # overlapping the in-flight updates on device
+        qpts, lo, hi = _query_stream(cfg, scenario, s)
+        t1 = time.perf_counter()
+        knn_tickets = [batcher.submit_knn(qpts[i], cfg.k)
+                       for i in range(cfg.queries)]
+        jax.block_until_ready([t.result() for t in knn_tickets])
+        rec.record("knn", time.perf_counter() - t1, cfg.queries)
+        t1 = time.perf_counter()
+        rng_tickets = [batcher.submit_range_count(lo[i], hi[i])
+                       for i in range(cfg.queries)]
+        jax.block_until_ready([t.result() for t in rng_tickets])
+        rec.record("range", time.perf_counter() - t1, cfg.queries)
+        with rec.timer("commit"):                   # exposed stall
+            srv.commit()
+        if s >= cfg.warmup:
+            measured_updates += \
+                (0 if step.delete is None else step.delete.shape[0]) + \
+                (0 if step.insert is None else step.insert.shape[0])
+    wall = rec.wall_s
+    out = {
+        "latency_ms": rec.latency_summary(),
+        "throughput": {
+            "query_per_s": rec.count("knn") + rec.count("range"),
+            "update_pts_per_s": measured_updates,
+            "wall_s": wall,
+        },
+        "build_s": build_s,
+        "final_size": len(srv.head_index),
+        "recoveries": srv.stats["recoveries"],
+    }
+    for key in ("query_per_s", "update_pts_per_s"):
+        out["throughput"][key] = out["throughput"][key] / max(wall, 1e-9)
+    if verbose:
+        lat = out["latency_ms"]
+        cells = " ".join(
+            f"{op} p50={lat[op]['p50_ms']:7.2f} p99={lat[op]['p99_ms']:7.2f}"
+            for op in ("insert", "delete", "knn", "range", "commit")
+            if op in lat and lat[op]["count"])
+        print(f"  [{kind}/{scenario}] {cells} | "
+              f"{out['throughput']['query_per_s']:,.0f} q/s, "
+              f"{out['throughput']['update_pts_per_s']:,.0f} upd-pts/s",
+              flush=True)
+    return out
+
+
+def run(kinds=DEFAULT_KINDS, scenarios=gen.SCENARIOS,
+        cfg: DriverCfg = DriverCfg(), verbose: bool = True) -> dict:
+    """Sweep kinds x scenarios; returns the full json-able payload."""
+    payload = {"config": dataclasses.asdict(cfg), "kinds": list(kinds),
+               "scenarios": list(scenarios), "results": {}}
+    for kind in kinds:
+        if verbose:
+            print(f"{kind}:", flush=True)
+        payload["results"][kind] = {
+            scenario: run_one(kind, scenario, cfg, verbose=verbose)
+            for scenario in scenarios}
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--kinds", default=",".join(DEFAULT_KINDS),
+                    help="comma-separated registered backends")
+    ap.add_argument("--scenarios", default=",".join(gen.SCENARIOS),
+                    help=f"comma-separated from {gen.SCENARIOS}")
+    ap.add_argument("--n", type=int, default=DriverCfg.n)
+    ap.add_argument("--batch", type=int, default=DriverCfg.batch)
+    ap.add_argument("--steps", type=int, default=DriverCfg.steps)
+    ap.add_argument("--warmup", type=int, default=DriverCfg.warmup)
+    ap.add_argument("--queries", type=int, default=DriverCfg.queries)
+    ap.add_argument("--k", type=int, default=DriverCfg.k)
+    ap.add_argument("--window", type=int, default=DriverCfg.window)
+    ap.add_argument("--max-delay-ms", type=float,
+                    default=DriverCfg.max_delay_ms)
+    ap.add_argument("--seed", type=int, default=DriverCfg.seed)
+    ap.add_argument("--json", nargs="?", const=DEFAULT_JSON, default=None,
+                    metavar="PATH", help="write the latency/throughput "
+                    f"payload (default {DEFAULT_JSON})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny end-to-end trace for CI: one backend, "
+                    "every scenario, seconds not minutes")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        cfg = DriverCfg(n=1500, batch=128, steps=2, warmup=1, queries=16,
+                        k=5, seed=args.seed)
+        payload = run(kinds=("spac-h",), scenarios=gen.SCENARIOS, cfg=cfg)
+        ops = {op for r in payload["results"]["spac-h"].values()
+               for op, s in r["latency_ms"].items() if s["count"]}
+        assert {"insert", "delete", "knn", "range", "commit"} <= ops, ops
+        print("serving driver smoke OK")
+        return
+    cfg = DriverCfg(n=args.n, batch=args.batch, steps=args.steps,
+                    warmup=args.warmup, queries=args.queries, k=args.k,
+                    window=args.window, max_delay_ms=args.max_delay_ms,
+                    seed=args.seed)
+    payload = run(kinds=args.kinds.split(","),
+                  scenarios=args.scenarios.split(","), cfg=cfg)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"wrote serving latency percentiles -> {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,236 @@
+"""``SpatialServer``: a versioned spatial index with snapshot-isolated
+queries and pipelined (async-dispatched) updates.
+
+The trees behind :class:`repro.core.SpatialIndex` are functional —
+every update returns a new handle and never mutates the old one — so a
+*snapshot* is free: it is just a reference to version ``v``'s handle.
+The server exploits that plus JAX async dispatch to overlap updates and
+queries with **no barrier between them**:
+
+* ``insert``/``delete`` dispatch version ``v+1``'s jit-cached update
+  closure and return immediately (dynamic backends only enqueue device
+  work; rebuild-style kd/zd stay synchronous — their size verification
+  needs a host read). The facade's usual host-side ``overflowed`` read
+  — a full device sync — is **deferred**: the flag is sticky across
+  updates (spac/porth carry it forward), so one read at the next sync
+  point covers every update since the last known-good version.
+* ``snapshot()`` hands out an immutable :class:`Snapshot` of any
+  retained version; queries against it are answered from exactly that
+  version's tree even while later updates are in flight on device
+  (asserted bit-for-bit in tests/test_serving.py).
+* A **bounded version window** (``window=``) is the backpressure knob:
+  publishing version ``v+1`` evicts version ``v-window`` and blocks on
+  it, so at most ``window`` updates are ever in flight and device queue
+  depth (and retained-tree memory) stays bounded.
+* ``commit()`` is the explicit barrier: it blocks on the head version,
+  performs the deferred overflow check, and reclaims old versions. If
+  any deferred insert overflowed, the server **replays the op log from
+  the last good version** through the facade's synchronous
+  grow->retry->compact recovery, so a committed head always holds the
+  exact multiset of every op applied in order — callers never lose
+  points. (Size the server with ``capacity_points=`` for the lifetime
+  maximum and replay never triggers; ``stats["recoveries"]`` counts it.)
+
+Snapshot isolation requires old versions' buffers to stay live, so the
+server refuses a ``donate=True`` index — the bounded window replaces
+donation as the memory-control mechanism. Distributed serving
+(``DistributedIndex`` behind the same surface) is future work; see
+ROADMAP "Serving runtime (PR 3)".
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import make_index
+from ..core.index import SpatialIndex
+
+
+class Snapshot:
+    """Immutable view of one server version; queries delegate to the
+    underlying :class:`SpatialIndex` (same engine, same cached plans)
+    and are isolated from every later update."""
+
+    __slots__ = ("version", "index")
+
+    def __init__(self, version: int, index: SpatialIndex):
+        self.version = version
+        self.index = index
+
+    def knn(self, qpts, k: int, *, impl: str = "auto"):
+        return self.index.knn(qpts, k, impl=impl)
+
+    def knn_points(self, qpts, k: int, *, impl: str = "auto"):
+        return self.index.knn_points(qpts, k, impl=impl)
+
+    def range_count(self, lo, hi):
+        return self.index.range_count(lo, hi)
+
+    def range_list(self, lo, hi):
+        return self.index.range_list(lo, hi)
+
+    @property
+    def size(self):
+        return self.index.size
+
+    def __len__(self) -> int:
+        return len(self.index)
+
+    def __repr__(self):
+        return f"Snapshot(version={self.version}, kind={self.index.kind!r})"
+
+
+class SpatialServer:
+    """Owns a lineage of :class:`SpatialIndex` versions; see the module
+    docstring for the pipelining/backpressure/commit contract."""
+
+    def __init__(self, index: SpatialIndex, *, window: int = 4):
+        if getattr(index, "_donate", False):
+            raise ValueError(
+                "SpatialServer requires a non-donating index: snapshots "
+                "keep old versions' buffers live, which donate=True would "
+                "hand to the next update; the bounded version window "
+                "(window=) bounds memory instead")
+        if window < 1:
+            raise ValueError("window must be >= 1")
+        self.window = int(window)
+        self._versions: OrderedDict[int, SpatialIndex] = OrderedDict()
+        self._head = 0
+        self._versions[0] = index
+        # recovery state: the last version whose (sticky) overflow flag
+        # was read clean, plus every op dispatched since
+        self._base = 0
+        self._base_index = index
+        self._log: list[tuple[str, object, object]] = []
+        self.stats = {"inserts": 0, "deletes": 0, "commits": 0,
+                      "recoveries": 0, "update_points": 0}
+
+    @classmethod
+    def build(cls, kind: str, points, *, window: int = 4, **make_kw):
+        """Build a fresh index via :func:`repro.core.make_index` and wrap
+        it; pass ``capacity_points=`` for the lifetime maximum so the
+        deferred overflow check never trips."""
+        if make_kw.get("donate"):
+            raise ValueError("SpatialServer does not support donate=True")
+        if make_kw.get("mesh") is not None:
+            raise ValueError("distributed serving is not supported yet")
+        return cls(make_index(kind, points, **make_kw), window=window)
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def head_version(self) -> int:
+        return self._head
+
+    @property
+    def head_index(self) -> SpatialIndex:
+        return self._versions[self._head]
+
+    @property
+    def versions(self) -> tuple[int, ...]:
+        """Retained version ids, oldest first."""
+        return tuple(self._versions)
+
+    @property
+    def in_flight(self) -> int:
+        """Updates dispatched since the last commit (upper bound on
+        device work not yet known complete)."""
+        return self._head - self._base
+
+    def snapshot(self, version: int | None = None) -> Snapshot:
+        """A consistent view of ``version`` (default: head). Raises
+        ``KeyError`` for versions outside the retained window."""
+        v = self._head if version is None else int(version)
+        try:
+            return Snapshot(v, self._versions[v])
+        except KeyError:
+            raise KeyError(
+                f"version {v} not retained (window holds "
+                f"{list(self._versions)})") from None
+
+    # -- updates (async dispatch) ------------------------------------------
+
+    @staticmethod
+    def _live_rows(pts, mask) -> int:
+        # host-side popcount (masks arrive host-side in practice); only
+        # the masked path pays a potential device read, and only for
+        # stats accuracy
+        return (int(pts.shape[0]) if mask is None
+                else int(np.count_nonzero(np.asarray(mask))))
+
+    def insert(self, pts, mask=None) -> int:
+        """Dispatch a batch insert as version ``head+1``; returns the new
+        version id without waiting for the device (dynamic backends)."""
+        pts = jnp.asarray(pts)
+        new = self.head_index.insert_unchecked(pts, mask)
+        self.stats["inserts"] += 1
+        self.stats["update_points"] += self._live_rows(pts, mask)
+        return self._publish(new, ("insert", pts, mask))
+
+    def delete(self, pts, mask=None) -> int:
+        """Dispatch a batch delete as version ``head+1`` (deletes never
+        overflow, so this is async for dynamic backends as-is)."""
+        pts = jnp.asarray(pts)
+        new = self.head_index.delete(pts, mask)
+        self.stats["deletes"] += 1
+        self.stats["update_points"] += self._live_rows(pts, mask)
+        return self._publish(new, ("delete", pts, mask))
+
+    def _publish(self, index: SpatialIndex, op: tuple) -> int:
+        self._head += 1
+        self._versions[self._head] = index
+        self._log.append(op)
+        while len(self._versions) > self.window:
+            v, old = self._versions.popitem(last=False)
+            # backpressure: everything up to the evicted version must be
+            # done before more updates pile on; its (now free) overflow
+            # read doubles as an early deferred check
+            jax.block_until_ready(old.tree)
+            if bool(getattr(old.tree, "overflowed", False)):
+                self._recover()
+            elif v > self._base:
+                # fast-forward the recovery base: ops up to v are clean
+                del self._log[: v - self._base]
+                self._base, self._base_index = v, old
+        return self._head
+
+    # -- sync points -------------------------------------------------------
+
+    def commit(self) -> int:
+        """Barrier: wait for the head version, run the deferred overflow
+        check (replaying from the last good version on overflow), and
+        reclaim every older version. Returns the committed version id."""
+        head = self._versions[self._head]
+        jax.block_until_ready(head.tree)
+        if hasattr(head.tree, "overflowed") and \
+                bool(head.tree.overflowed):
+            head = self._recover()
+        self._base, self._base_index = self._head, head
+        self._log = []
+        self._versions = OrderedDict({self._head: head})
+        self.stats["commits"] += 1
+        return self._head
+
+    def _recover(self) -> SpatialIndex:
+        """Replay the op log from the last good version through the
+        facade's synchronous recovery path (grow -> retry -> compact),
+        making the head exact again after a deferred overflow."""
+        idx = self._base_index
+        for op, pts, mask in self._log:
+            idx = (idx.insert(pts, mask) if op == "insert"
+                   else idx.delete(pts, mask))
+        jax.block_until_ready(idx.tree)
+        self._versions = OrderedDict({self._head: idx})
+        self._base, self._base_index = self._head, idx
+        self._log = []
+        self.stats["recoveries"] += 1
+        return idx
+
+    def __repr__(self):
+        return (f"SpatialServer(kind={self.head_index.kind!r}, "
+                f"head={self._head}, window={self.window}, "
+                f"retained={len(self._versions)})")
