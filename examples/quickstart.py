@@ -20,6 +20,8 @@ n = 20_000
 pts = gen.uniform(key, n, dim=2)                     # (n, 2) int32
 idx = make_index("spac-h", pts, phi=32)              # SPaC over Hilbert
 print(f"SPaC-H index: {len(idx)} points in {int(idx.num_rows)} leaf "
+      # contract: allow[capacity-internals] display-only introspection;
+      # nothing here acts on the capacity
       f"rows ({idx.capacity_rows} allocated)")
 
 # --------------------------------------------------------- batch update
@@ -56,3 +58,9 @@ d2_p, _ = t2.knn(qpts, k=10)
 agree = bool(jnp.allclose(jnp.sort(d2_p, axis=1), jnp.sort(d2, axis=1)))
 print("P-Orth agrees with SPaC on kNN distances:", agree)
 assert agree
+
+# ------------------------------------------------- contract linting
+# the invariants this example leans on (exact-by-default queries,
+# automatic capacity, snapshot-safe serving) are machine-checked; run
+#   PYTHONPATH=src python -m repro.analysis.lint src benchmarks examples
+# (or `repro-lint` once installed) — see ROADMAP.md "Contracts"

@@ -1,0 +1,26 @@
+"""``repro.analysis``: static enforcement of the repo's contracts.
+
+The stack's invariants — unjitted ``_impl`` spellings inside shard_map
+regions (the jax 0.4.37 nested-jit miscompile), exactness knobs owned by
+the QueryEngine alone, capacity internals owned by the facade, snapshot
+isolation vs. donation, a sync-free serving dispatch path, and
+signature-cached jit closures — were documented prose until this
+package. Now they are rules: a stdlib-``ast`` linter with per-rule
+classes, file/line diagnostics, and ``# contract: allow[rule-name]``
+suppression pragmas, run by CI (and ``tests/test_contracts.py``) over
+``src/``.
+
+Run it locally:
+
+    PYTHONPATH=src python -m repro.analysis.lint src benchmarks examples
+
+or via the ``repro-lint`` console script. See ROADMAP.md "Contracts"
+for the rule list and the invariant each one guards.
+"""
+
+from .diagnostics import Diagnostic, LintResult
+from .lint import lint_paths, lint_sources, main
+from .rules import RULES
+
+__all__ = ["Diagnostic", "LintResult", "RULES", "lint_paths",
+           "lint_sources", "main"]

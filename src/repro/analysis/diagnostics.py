@@ -1,0 +1,44 @@
+"""Diagnostic records and the lint run result."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Diagnostic:
+    """One violation at a file/line, attributed to a rule."""
+
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}:{self.col}: "
+                f"[{self.rule}] {self.message}")
+
+
+@dataclasses.dataclass
+class LintResult:
+    """Outcome of one lint run over a set of files.
+
+    ``diagnostics`` are the *unsuppressed* violations (nonempty => the
+    run fails); ``suppressed`` are violations silenced by a
+    ``# contract: allow[rule]`` pragma, kept so the CLI can report how
+    many contract escapes the tree carries.
+    """
+
+    diagnostics: list[Diagnostic] = dataclasses.field(default_factory=list)
+    suppressed: list[Diagnostic] = dataclasses.field(default_factory=list)
+    files: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return not self.diagnostics
+
+    def summary(self) -> str:
+        return (f"{len(self.diagnostics)} violation(s), "
+                f"{len(self.suppressed)} suppressed, "
+                f"{self.files} file(s) checked")

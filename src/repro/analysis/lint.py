@@ -1,0 +1,143 @@
+"""Lint driver: file discovery, rule execution, pragma resolution, CLI.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis.lint src benchmarks examples
+
+or, installed, ``repro-lint src``. Exit status 0 iff no unsuppressed
+violations. Programmatic entry points:
+
+* :func:`lint_sources` — lint a ``{path: source}`` mapping (what the
+  fixture tests use; paths may be virtual);
+* :func:`lint_paths` — discover ``*.py`` under files/directories and
+  lint them.
+
+Fixture files may carry a ``# lint-as: <virtual path>`` first-line
+header so path-scoped rules (allowlists keyed on e.g.
+``core/engine.py``) can be exercised from ``tests/fixtures/``.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+from typing import Iterable, Mapping
+
+from .diagnostics import Diagnostic, LintResult
+from .pragmas import BAD_PRAGMA, UNUSED_PRAGMA, parse_pragmas
+from .rules import RULE_NAMES, RULES
+from .visitor import JitRegistry, LintContext, ModuleInfo, norm_path
+
+LINT_AS_PREFIX = "# lint-as:"
+
+
+def _effective_path(path: str, source: str) -> str:
+    first = source.split("\n", 1)[0]
+    if first.startswith(LINT_AS_PREFIX):
+        return norm_path(first[len(LINT_AS_PREFIX):].strip())
+    return norm_path(path)
+
+
+def lint_sources(sources: Mapping[str, str]) -> LintResult:
+    """Run every rule over the given ``{path: source}`` mapping."""
+    result = LintResult()
+    modules: list[ModuleInfo] = []
+    for path, source in sorted(sources.items()):
+        try:
+            modules.append(ModuleInfo.parse(_effective_path(path, source),
+                                            source))
+        except SyntaxError as exc:
+            result.diagnostics.append(Diagnostic(
+                path=norm_path(path), line=exc.lineno or 1,
+                col=(exc.offset or 1) - 1, rule="parse-error",
+                message=f"could not parse: {exc.msg}"))
+    result.files = len(sources)
+
+    registry = JitRegistry()
+    for mod in modules:
+        registry.add_module(mod)
+    ctx = LintContext(modules=modules, jit_registry=registry)
+
+    rules = [cls() for cls in RULES]
+    for mod in modules:
+        raw = [d for rule in rules for d in rule.check(mod, ctx)]
+        pragmas = parse_pragmas(mod.source)
+
+        for diag in sorted(raw):
+            hit = next((p for p in pragmas
+                        if p.target == diag.line and p.rule == diag.rule),
+                       None)
+            if hit is not None:
+                hit.used = True
+                result.suppressed.append(diag)
+            else:
+                result.diagnostics.append(diag)
+
+        # pragma hygiene — neither meta-rule is itself suppressible, so
+        # deleting (or typo-ing) a pragma always surfaces in CI
+        for p in pragmas:
+            if p.rule not in RULE_NAMES:
+                result.diagnostics.append(Diagnostic(
+                    path=mod.path, line=p.line, col=0, rule=BAD_PRAGMA,
+                    message=f"unknown rule `{p.rule}` in contract "
+                    f"pragma (known: {', '.join(RULE_NAMES)})"))
+            elif not p.used:
+                result.diagnostics.append(Diagnostic(
+                    path=mod.path, line=p.line, col=0,
+                    rule=UNUSED_PRAGMA,
+                    message=f"pragma allows `{p.rule}` but line "
+                    f"{p.target} has no such violation; remove the "
+                    f"stale pragma"))
+
+    result.diagnostics.sort()
+    result.suppressed.sort()
+    return result
+
+
+def discover(paths: Iterable[str]) -> list[str]:
+    """Expand files/directories into a sorted list of ``*.py`` files."""
+    out: list[str] = []
+    for path in paths:
+        if os.path.isfile(path):
+            out.append(path)
+            continue
+        for root, dirs, files in os.walk(path):
+            dirs[:] = sorted(d for d in dirs
+                             if d != "__pycache__"
+                             and not d.startswith("."))
+            out.extend(os.path.join(root, f) for f in sorted(files)
+                       if f.endswith(".py"))
+    return sorted(set(out))
+
+
+def lint_paths(paths: Iterable[str]) -> LintResult:
+    sources: dict[str, str] = {}
+    for path in discover(paths):
+        with open(path, encoding="utf-8") as fh:
+            sources[path] = fh.read()
+    return lint_sources(sources)
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if "--help" in argv or "-h" in argv:
+        print(__doc__)
+        print("rules:")
+        for cls in RULES:
+            print(f"  {cls.name:22s} {cls.description}")
+        return 0
+    paths = argv or ["src"]
+    missing = [p for p in paths if not os.path.exists(p)]
+    if missing:
+        print(f"repro-lint: no such path: {', '.join(missing)}",
+              file=sys.stderr)
+        return 2
+    result = lint_paths(paths)
+    for diag in result.diagnostics:
+        print(diag.render())
+    print(f"repro-lint: {result.summary()}")
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

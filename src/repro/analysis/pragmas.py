@@ -1,0 +1,84 @@
+"""``# contract: allow[rule-name]`` suppression pragmas.
+
+A pragma silences exactly one rule on exactly one line:
+
+* written as a trailing comment, it applies to its own line;
+* written on a comment-only line, it applies to the next code line
+  (pragmas stack: consecutive comment-line pragmas all target the same
+  following code line) — needed when the flagged line has no room left
+  at 79 columns.
+
+Anything after the closing bracket is the human-facing justification
+and is required by convention (the audit rule: every pragma says *why*
+the violation is safe). Pragma hygiene is itself linted: an unknown
+rule name raises ``bad-pragma`` and a pragma that suppresses nothing
+raises ``unused-pragma`` — so a stale pragma can never silently
+rubber-stamp future code. Neither meta-rule can be pragma'd away.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+import re
+import tokenize
+
+PRAGMA_RE = re.compile(r"#\s*contract:\s*allow\[([^\]\s]*)\]")
+
+# meta-rules emitted by the pragma machinery itself
+BAD_PRAGMA = "bad-pragma"
+UNUSED_PRAGMA = "unused-pragma"
+
+
+@dataclasses.dataclass
+class Pragma:
+    line: int           # line the pragma comment sits on (1-based)
+    target: int         # code line it suppresses
+    rule: str
+    used: bool = False
+
+
+def _is_comment_only(text: str) -> bool:
+    stripped = text.lstrip()
+    return stripped.startswith("#")
+
+
+def _comment_lines(source: str) -> set[int]:
+    """Line numbers that carry a real COMMENT token. Tokenizing (rather
+    than regexing raw lines) keeps pragma-shaped text inside string
+    literals and docstrings — e.g. this module's own docs — inert."""
+    out: set[int] = set()
+    try:
+        for tok in tokenize.generate_tokens(io.StringIO(source).readline):
+            if tok.type == tokenize.COMMENT:
+                out.add(tok.start[0])
+    except (tokenize.TokenError, IndentationError):
+        # fall back to treating every line as a candidate; the source
+        # already parsed with ast, so this is close to unreachable
+        out.update(range(1, source.count("\n") + 2))
+    return out
+
+
+def parse_pragmas(source: str) -> list[Pragma]:
+    """Scan comments for pragmas and resolve each one's target line."""
+    lines = source.splitlines()
+    commented = _comment_lines(source)
+    pragmas: list[Pragma] = []
+    for i, text in enumerate(lines, start=1):
+        if i not in commented:
+            continue
+        hits = PRAGMA_RE.findall(text)
+        if not hits:
+            continue
+        if _is_comment_only(text):
+            # applies to the next non-comment, non-blank line
+            target = i
+            for j in range(i + 1, len(lines) + 1):
+                nxt = lines[j - 1]
+                if nxt.strip() and not _is_comment_only(nxt):
+                    target = j
+                    break
+        else:
+            target = i
+        pragmas.extend(Pragma(line=i, target=target, rule=r) for r in hits)
+    return pragmas

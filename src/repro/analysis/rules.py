@@ -1,0 +1,457 @@
+"""The contract rules. Each class enforces one invariant from
+ROADMAP.md; see the "Contracts" section there for the narrative form,
+and ``tests/fixtures/contracts/`` for a violating + clean example of
+every rule.
+
+Escape hatch: ``# contract: allow[rule-name] <why it is safe>`` on (or
+immediately above) the flagged line — see :mod:`repro.analysis.pragmas`.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .diagnostics import Diagnostic
+from .visitor import (JitRegistry, LintContext, ModuleInfo, Rule,
+                      dotted_name, is_jax_jit, is_jit_wrapping, path_in)
+
+
+def _last(dotted: str | None) -> str | None:
+    return dotted.rsplit(".", 1)[-1] if dotted else None
+
+
+def _const_str(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+# ---------------------------------------------------------------------------
+# 1. jit-in-shard-map
+# ---------------------------------------------------------------------------
+
+class JitInShardMap(Rule):
+    """jax 0.4.37 miscompiles a nested ``jax.jit`` (notably around
+    while_loops) inside ``shard_map`` — wrong results on shards != 0.
+    Shard-local code must call the unjitted ``_impl`` spellings;
+    shard_map's own trace is the only jit the region gets."""
+
+    name = "jit-in-shard-map"
+    description = ("no jit-wrapped callable invoked inside a shard_map "
+                   "region; use the unjitted _impl spellings")
+
+    def check(self, mod: ModuleInfo,
+              ctx: LintContext) -> Iterator[Diagnostic]:
+        wrappers = self._wrapper_names(mod)
+        seen: set[int] = set()
+        yield from self._scan(mod.tree.body, mod, ctx, wrappers,
+                              scopes=[], seen=seen)
+
+    @staticmethod
+    def _wrapper_names(mod: ModuleInfo) -> set[str]:
+        """Local helpers that forward their first parameter into
+        shard_map (e.g. a version-compat ``_smap``) open regions too."""
+        out: set[str] = set()
+        for fn in ast.walk(mod.tree):
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            params = [a.arg for a in fn.args.args]
+            if not params:
+                continue
+            for node in ast.walk(fn):
+                if (isinstance(node, ast.Call)
+                        and _last(dotted_name(node.func)) == "shard_map"
+                        and node.args
+                        and isinstance(node.args[0], ast.Name)
+                        and node.args[0].id == params[0]):
+                    out.add(fn.name)
+                    break
+        return out
+
+    def _scan(self, body, mod: ModuleInfo, ctx: LintContext,
+              wrappers: set[str], scopes: list[dict], seen: set[int],
+              ) -> Iterator[Diagnostic]:
+        """Walk statement lists keeping a def-scope stack so a region
+        named ``local`` resolves to the *enclosing function's* ``local``,
+        not whichever same-named def happens to come last in the file."""
+        scope = {n.name: n for n in body
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        scopes = scopes + [scope]
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield from self._scan(stmt.body, mod, ctx, wrappers,
+                                      scopes, seen)
+                continue
+            for node in ast.walk(stmt):
+                if not isinstance(node, ast.Call) or not node.args:
+                    continue
+                callee = _last(dotted_name(node.func))
+                if callee != "shard_map" and callee not in wrappers:
+                    continue
+                region = node.args[0]
+                if isinstance(region, ast.Name):
+                    region = next(
+                        (s[region.id] for s in reversed(scopes)
+                         if region.id in s), None)
+                if not isinstance(region, (ast.FunctionDef,
+                                           ast.AsyncFunctionDef,
+                                           ast.Lambda)):
+                    continue
+                if id(region) in seen:
+                    continue
+                seen.add(id(region))
+                yield from self._check_region(region, mod,
+                                              ctx.jit_registry)
+
+    def _check_region(self, region, mod: ModuleInfo,
+                      registry: JitRegistry) -> Iterator[Diagnostic]:
+        for node in ast.walk(region):
+            if not isinstance(node, ast.Call):
+                continue
+            if is_jit_wrapping(node, mod):
+                yield self.diag(
+                    mod, node, "jax.jit constructed inside a shard_map "
+                    "region (nested jit miscompiles under shard_map on "
+                    "jax 0.4.x)")
+                continue
+            jitted = registry.is_jitted(mod, node.func)
+            if jitted is not None:
+                yield self.diag(
+                    mod, node,
+                    f"call to jit-wrapped `{jitted}` inside a shard_map "
+                    f"region; call its unjitted `_impl` spelling "
+                    f"(nested jit miscompiles under shard_map on "
+                    f"jax 0.4.x)")
+
+
+# ---------------------------------------------------------------------------
+# 2. exactness-knobs
+# ---------------------------------------------------------------------------
+
+class ExactnessKnobs(Rule):
+    """Query answers are exact *because* only the QueryEngine sizes the
+    fixed-capacity buffers and checks truncation. A caller passing
+    ``max_rows=``/``cap=`` or reading ``truncated`` is re-opening the
+    silent-short-answer hole PR 2 closed."""
+
+    name = "exactness-knobs"
+    description = ("no truncated reads or max_rows=/cap= keywords "
+                   "outside the query engine layer")
+
+    ALLOWED = ("core/engine.py", "core/queries.py")
+    KNOBS = ("max_rows", "cap")
+
+    def check(self, mod: ModuleInfo,
+              ctx: LintContext) -> Iterator[Diagnostic]:
+        if path_in(mod, self.ALLOWED):
+            return
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Attribute) and \
+                    node.attr == "truncated":
+                yield self.diag(
+                    mod, node, "`truncated` read outside the engine "
+                    "layer; the QueryEngine escalates buffers until "
+                    "nothing truncates — use its exact surface")
+            elif isinstance(node, ast.Call):
+                if _last(dotted_name(node.func)) in ("getattr",
+                                                     "hasattr") and \
+                        len(node.args) >= 2 and \
+                        _const_str(node.args[1]) == "truncated":
+                    yield self.diag(
+                        mod, node, "`truncated` read (via getattr/"
+                        "hasattr) outside the engine layer")
+                for kw in node.keywords:
+                    if kw.arg in self.KNOBS:
+                        yield self.diag(
+                            mod, kw.value, f"`{kw.arg}=` passed outside "
+                            f"the engine layer; exactness requires the "
+                            f"QueryEngine to own buffer sizing")
+
+
+# ---------------------------------------------------------------------------
+# 3. capacity-internals
+# ---------------------------------------------------------------------------
+
+class CapacityInternals(Rule):
+    """The facade's never-lose-points guarantee holds because only
+    ``core/index.py`` drives the grow -> retry -> compact ladder and
+    reads overflow flags. Outside callers touching capacity internals
+    bypass that recovery (the serving runtime's deferred ``overflowed``
+    read is the one sanctioned exception)."""
+
+    name = "capacity-internals"
+    description = ("no capacity_rows/overflowed/grow/compact access "
+                   "outside the index facade and backend modules")
+
+    BACKEND_FILES = ("core/index.py", "core/porth.py", "core/spac.py",
+                     "core/baselines.py", "core/leafstore.py",
+                     "core/distributed.py")
+    # serving/server.py's deferred-overflow read is the sanctioned
+    # exception (ROADMAP "Serving runtime": commit-time check + replay)
+    ALLOWED = {
+        "capacity_rows": BACKEND_FILES,
+        "overflowed": BACKEND_FILES + ("serving/server.py",),
+        "grow": BACKEND_FILES,
+        "compact": BACKEND_FILES,
+    }
+
+    def check(self, mod: ModuleInfo,
+              ctx: LintContext) -> Iterator[Diagnostic]:
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Attribute):
+                name = node.attr
+                if name in ("capacity_rows", "overflowed"):
+                    if not path_in(mod, self.ALLOWED[name]):
+                        yield self.diag(
+                            mod, node, f"`{name}` access outside the "
+                            f"index facade; capacity is automatic — "
+                            f"use make_index/insert and let the "
+                            f"grow->retry->compact ladder recover")
+            elif isinstance(node, ast.Call):
+                callee = _last(dotted_name(node.func))
+                if callee in ("grow", "compact") and \
+                        isinstance(node.func, ast.Attribute) and \
+                        not path_in(mod, self.ALLOWED[callee]):
+                    yield self.diag(
+                        mod, node, f"`{callee}()` called outside the "
+                        f"index facade; the facade owns capacity "
+                        f"recovery")
+                elif _last(dotted_name(node.func)) in ("getattr",
+                                                       "hasattr") and \
+                        len(node.args) >= 2 and \
+                        _const_str(node.args[1]) in ("capacity_rows",
+                                                     "overflowed"):
+                    name = _const_str(node.args[1])
+                    if not path_in(mod, self.ALLOWED[name]):
+                        yield self.diag(
+                            mod, node, f"`{name}` access (via getattr/"
+                            f"hasattr) outside the index facade")
+
+
+# ---------------------------------------------------------------------------
+# 4. donate-into-server
+# ---------------------------------------------------------------------------
+
+class DonateIntoServer(Rule):
+    """Snapshot isolation needs old versions' buffers live;
+    ``donate=True`` hands them to the next update. The server refuses
+    such indexes at runtime — this rule catches it before it runs."""
+
+    name = "donate-into-server"
+    description = "no donate=True index may reach SpatialServer"
+
+    def check(self, mod: ModuleInfo,
+              ctx: LintContext) -> Iterator[Diagnostic]:
+        for scope in self._scopes(mod.tree):
+            donated = self._donated_names(scope)
+            for node in self._shallow_walk(scope):
+                if not isinstance(node, ast.Call):
+                    continue
+                dotted = dotted_name(node.func) or ""
+                is_ctor = _last(dotted) == "SpatialServer"
+                is_build = dotted.endswith("SpatialServer.build")
+                if is_build and self._has_donate(node):
+                    yield self.diag(
+                        mod, node, "SpatialServer.build(donate=True): "
+                        "snapshots need old buffers live; use the "
+                        "version window for memory control")
+                if not is_ctor:
+                    continue
+                for arg in list(node.args) + \
+                        [kw.value for kw in node.keywords]:
+                    if isinstance(arg, ast.Name) and arg.id in donated:
+                        yield self.diag(
+                            mod, node, f"index `{arg.id}` was built "
+                            f"with donate=True and flows into "
+                            f"SpatialServer; snapshot isolation "
+                            f"forbids donation")
+                    elif isinstance(arg, ast.Call) and \
+                            self._has_donate(arg):
+                        yield self.diag(
+                            mod, node, "donate=True index constructed "
+                            "directly inside SpatialServer(...); "
+                            "snapshot isolation forbids donation")
+
+    @staticmethod
+    def _scopes(tree: ast.Module):
+        yield tree
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                yield node
+
+    @staticmethod
+    def _shallow_walk(scope) -> Iterator[ast.AST]:
+        """Walk one scope without descending into nested function
+        scopes — a name donated in one function must not taint a
+        same-named index in another."""
+        stack = list(ast.iter_child_nodes(scope))
+        while stack:
+            node = stack.pop()
+            yield node
+            if not isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef, ast.Lambda)):
+                stack.extend(ast.iter_child_nodes(node))
+
+    @staticmethod
+    def _has_donate(call: ast.Call) -> bool:
+        for kw in call.keywords:
+            if kw.arg == "donate" and isinstance(kw.value, ast.Constant) \
+                    and bool(kw.value.value):
+                return True
+        return False
+
+    def _donated_names(self, scope) -> set[str]:
+        out: set[str] = set()
+        for node in self._shallow_walk(scope):
+            if isinstance(node, ast.Assign) and \
+                    isinstance(node.value, ast.Call) and \
+                    self._has_donate(node.value):
+                out.update(t.id for t in node.targets
+                           if isinstance(t, ast.Name))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# 5. host-sync-in-dispatch
+# ---------------------------------------------------------------------------
+
+class HostSyncInDispatch(Rule):
+    """The serving contract is that ``insert``/``delete`` and request
+    enqueue *dispatch and return* — any host read of a device value
+    there (block_until_ready / .item() / np.asarray / float) silently
+    serializes the pipeline and hides the async win the version window
+    exists for."""
+
+    name = "host-sync-in-dispatch"
+    description = ("no device->host sync on the serving dispatch path "
+                   "(server.insert/delete, batcher enqueue)")
+
+    SCOPES = {
+        "serving/server.py": ("insert", "delete", "_publish",
+                              "_live_rows"),
+        "serving/batcher.py": ("submit_knn", "submit_range_count",
+                               "submit_range_list", "_enqueue",
+                               "_as_rows"),
+    }
+
+    def check(self, mod: ModuleInfo,
+              ctx: LintContext) -> Iterator[Diagnostic]:
+        names = None
+        for suffix, fns in self.SCOPES.items():
+            if mod.path.endswith(suffix):
+                names = fns
+                break
+        if names is None:
+            return
+        for node in ast.walk(mod.tree):
+            if isinstance(node, (ast.FunctionDef,
+                                 ast.AsyncFunctionDef)) and \
+                    node.name in names:
+                yield from self._check_fn(node, mod)
+
+    def _check_fn(self, fn, mod: ModuleInfo) -> Iterator[Diagnostic]:
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = _last(dotted_name(node.func))
+            if callee == "block_until_ready":
+                yield self.diag(
+                    mod, node, f"block_until_ready in dispatch-path "
+                    f"`{fn.name}`: updates/enqueues must return "
+                    f"without waiting on device work")
+            elif isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "item" and not node.args:
+                yield self.diag(
+                    mod, node, f".item() in dispatch-path `{fn.name}` "
+                    f"is a device sync")
+            elif mod.resolve(node.func) == "numpy.asarray":
+                yield self.diag(
+                    mod, node, f"np.asarray in dispatch-path "
+                    f"`{fn.name}` pulls device values to host; defer "
+                    f"the read to a sync point (commit)")
+            elif isinstance(node.func, ast.Name) and \
+                    node.func.id == "float" and node.args and \
+                    not isinstance(node.args[0], ast.Constant):
+                yield self.diag(
+                    mod, node, f"float() on a runtime value in "
+                    f"dispatch-path `{fn.name}` is a device sync when "
+                    f"the value lives on device")
+
+
+# ---------------------------------------------------------------------------
+# 6. uncached-jit
+# ---------------------------------------------------------------------------
+
+class UncachedJit(Rule):
+    """A ``jax.jit`` constructed per call (inside a function body or a
+    loop) gets a fresh trace cache each time — every invocation
+    recompiles. Construct jits at module level, or behind a
+    ``functools.lru_cache`` closure factory keyed on the static
+    signature (the ``_update_closure`` / query-plan pattern)."""
+
+    name = "uncached-jit"
+    description = ("no jax.jit constructed per call; use module level "
+                   "or an lru_cache closure factory")
+
+    CACHE_DECOS = ("functools.lru_cache", "functools.cache",
+                   "lru_cache", "cache")
+
+    def check(self, mod: ModuleInfo,
+              ctx: LintContext) -> Iterator[Diagnostic]:
+        yield from self._visit(mod.tree.body, mod, depth=0,
+                               cached=False, in_loop=False)
+
+    def _is_cached(self, fn, mod: ModuleInfo) -> bool:
+        for d in fn.decorator_list:
+            target = d.func if isinstance(d, ast.Call) else d
+            if mod.resolve(target) in self.CACHE_DECOS:
+                return True
+        return False
+
+    def _visit(self, nodes, mod, *, depth: int, cached: bool,
+               in_loop: bool) -> Iterator[Diagnostic]:
+        for node in nodes:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                # a jit decorator on a *nested* def is a per-call jit
+                if depth > 0 and not cached and any(
+                        is_jit_wrapping(d, mod)
+                        for d in node.decorator_list):
+                    yield self.diag(
+                        mod, node, f"@jax.jit on nested def "
+                        f"`{node.name}` re-traces per enclosing call; "
+                        f"hoist to module level or an lru_cache "
+                        f"closure factory")
+                # recurse into the body only — decorators are handled
+                # above and must not be re-flagged as plain jit calls
+                yield from self._visit(
+                    node.body, mod, depth=depth + 1,
+                    cached=cached or self._is_cached(node, mod),
+                    in_loop=False)
+            elif isinstance(node, ast.Lambda):
+                yield from self._visit(
+                    [node.body], mod, depth=depth + 1, cached=cached,
+                    in_loop=False)
+            else:
+                here_loop = in_loop or isinstance(
+                    node, (ast.For, ast.While, ast.AsyncFor))
+                if isinstance(node, ast.Call) and \
+                        is_jax_jit(node.func, mod) and not cached and \
+                        (depth > 0 or here_loop):
+                    where = "a loop" if here_loop and depth == 0 else \
+                        "a function body"
+                    yield self.diag(
+                        mod, node, f"jax.jit constructed inside "
+                        f"{where} builds a fresh trace cache per call; "
+                        f"hoist to module level or an lru_cache "
+                        f"closure factory")
+                yield from self._visit(
+                    ast.iter_child_nodes(node), mod, depth=depth,
+                    cached=cached, in_loop=here_loop)
+
+
+RULES: tuple[type[Rule], ...] = (
+    JitInShardMap, ExactnessKnobs, CapacityInternals, DonateIntoServer,
+    HostSyncInDispatch, UncachedJit)
+
+RULE_NAMES: tuple[str, ...] = tuple(r.name for r in RULES)

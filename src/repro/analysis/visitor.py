@@ -1,0 +1,192 @@
+"""Linter framework: parsed-module model, name resolution, jit registry.
+
+The rules in :mod:`repro.analysis.rules` are syntactic, but several of
+the contracts they guard are *cross-module* facts — "is the callee a
+``jax.jit``-wrapped function?" depends on where the callee is defined.
+This module gives rules the two pieces of shared infrastructure:
+
+* :class:`ModuleInfo` — one parsed file plus its import-alias table, so
+  a rule can resolve ``jnp.sum`` -> ``jax.numpy.sum`` or
+  ``spac.insert`` -> ``spac.insert`` without executing anything; and
+* :class:`JitRegistry` — a first pass over *all* linted files recording
+  every function that is jit-wrapped at module level (``@jax.jit``,
+  ``@functools.partial(jax.jit, ...)``, or ``name = jax.jit(fn)``), so
+  the shard_map rule can flag a jitted callee invoked in another file's
+  shard_map region.
+
+Resolution is best-effort by design: a linter must never import the
+code under analysis, so aliases are tracked per module and dotted names
+are matched by (module stem, attribute) pairs. That is exact for this
+repo's idiom (explicit module imports, ``_impl`` spellings) and fails
+open — unresolvable names are simply not flagged.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Iterator
+
+from .diagnostics import Diagnostic
+
+
+def norm_path(path: str) -> str:
+    return path.replace("\\", "/")
+
+
+def dotted_name(node: ast.AST) -> str | None:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+@dataclasses.dataclass
+class ModuleInfo:
+    """One parsed source file plus its name-resolution tables."""
+
+    path: str                 # normalized, as given to the linter
+    stem: str                 # module basename without .py
+    tree: ast.Module
+    source: str
+    # local name -> dotted origin ("jnp" -> "jax.numpy",
+    # "shard_map" -> "jax.experimental.shard_map.shard_map", ...)
+    origins: dict[str, str] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def parse(cls, path: str, source: str) -> "ModuleInfo":
+        path = norm_path(path)
+        stem = path.rsplit("/", 1)[-1].removesuffix(".py")
+        info = cls(path=path, stem=stem, tree=ast.parse(source),
+                   source=source)
+        info._collect_imports()
+        return info
+
+    def _collect_imports(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.asname:
+                        self.origins[a.asname] = a.name
+                    else:
+                        # ``import jax.numpy`` binds the name ``jax``
+                        head = a.name.split(".")[0]
+                        self.origins[head] = head
+            elif isinstance(node, ast.ImportFrom):
+                base = node.module or ""
+                for a in node.names:
+                    local = a.asname or a.name
+                    self.origins[local] = (f"{base}.{a.name}" if base
+                                           else a.name)
+
+    def resolve(self, node: ast.AST) -> str | None:
+        """Fully-resolved dotted path of a Name/Attribute expression,
+        with the leading component mapped through this module's
+        imports. Returns None for anything that is not a plain dotted
+        chain (calls, subscripts, ...)."""
+        dotted = dotted_name(node)
+        if dotted is None:
+            return None
+        head, _, rest = dotted.partition(".")
+        origin = self.origins.get(head)
+        if origin is None:
+            return dotted
+        return f"{origin}.{rest}" if rest else origin
+
+    def resolves_to(self, node: ast.AST, target: str) -> bool:
+        """True if the expression resolves exactly to ``target`` (a
+        dotted path like "jax.jit")."""
+        return self.resolve(node) == target
+
+
+def is_jax_jit(node: ast.AST, mod: ModuleInfo) -> bool:
+    """Expression is the ``jax.jit`` transform itself."""
+    return mod.resolves_to(node, "jax.jit")
+
+
+def is_jit_wrapping(node: ast.AST, mod: ModuleInfo) -> bool:
+    """Expression *applies* jax.jit: ``jax.jit(...)``,
+    ``functools.partial(jax.jit, ...)``, or either used bare as a
+    decorator."""
+    if is_jax_jit(node, mod):
+        return True
+    if isinstance(node, ast.Call):
+        if is_jax_jit(node.func, mod):
+            return True
+        # functools.partial(jax.jit, static_argnames=...)
+        if mod.resolve(node.func) in ("functools.partial", "partial") \
+                and node.args and is_jax_jit(node.args[0], mod):
+            return True
+    return False
+
+
+class JitRegistry:
+    """(module stem, function name) pairs known to be jit-wrapped at
+    module level across every linted file."""
+
+    def __init__(self) -> None:
+        self._jitted: set[tuple[str, str]] = set()
+
+    def add_module(self, mod: ModuleInfo) -> None:
+        for node in mod.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(is_jit_wrapping(d, mod) for d in node.decorator_list):
+                    self._jitted.add((mod.stem, node.name))
+            elif isinstance(node, ast.Assign):
+                if isinstance(node.value, ast.Call) and \
+                        is_jax_jit(node.value.func, mod):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            self._jitted.add((mod.stem, t.id))
+
+    def is_jitted(self, mod: ModuleInfo, callee: ast.AST) -> str | None:
+        """If ``callee`` (the func of a Call in ``mod``) resolves to a
+        registered jitted function, return its dotted description."""
+        resolved = mod.resolve(callee)
+        if resolved is None:
+            return None
+        parts = resolved.split(".")
+        if len(parts) == 1:
+            # bare name: defined (or jit-assigned) in this module
+            return resolved if (mod.stem, resolved) in self._jitted \
+                else None
+        # dotted: match by (module stem, attribute) — exact enough for
+        # the repo's explicit-module-import idiom
+        if (parts[-2], parts[-1]) in self._jitted:
+            return resolved
+        return None
+
+
+@dataclasses.dataclass
+class LintContext:
+    """Shared state rules can consult: every parsed module plus the
+    cross-file jit registry."""
+
+    modules: list[ModuleInfo]
+    jit_registry: JitRegistry
+
+
+class Rule:
+    """Base class: one named contract checked per module."""
+
+    name: str = ""
+    description: str = ""
+
+    def check(self, mod: ModuleInfo,
+              ctx: LintContext) -> Iterator[Diagnostic]:
+        raise NotImplementedError
+
+    def diag(self, mod: ModuleInfo, node: ast.AST,
+             message: str) -> Diagnostic:
+        return Diagnostic(path=mod.path, line=node.lineno,
+                          col=node.col_offset, rule=self.name,
+                          message=message)
+
+
+def path_in(mod: ModuleInfo, suffixes: tuple[str, ...]) -> bool:
+    return any(mod.path.endswith(s) for s in suffixes)

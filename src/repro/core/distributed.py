@@ -152,9 +152,12 @@ def build(points, mesh, mask=None, *, axis: str = "data", phi: int = 32,
         rp, rm, dropped = _route_exchange(pts, msk, splitters, axis,
                                           n_shards, cap, curve, bits,
                                           coord_bits)
-        tree = spac.build(rp, rm, phi=phi, curve=curve, bits=bits,
-                          coord_bits=coord_bits,
-                          capacity_rows=capacity_rows)
+        # _impl spelling: a jitted callee here would nest jax.jit under
+        # shard_map, the jax 0.4.x miscompile class (wrong results on
+        # shards != 0); shard_map's own trace is the only jit we want
+        tree = spac.build_impl(rp, rm, phi=phi, curve=curve, bits=bits,
+                               coord_bits=coord_bits,
+                               capacity_rows=capacity_rows)
         return _stack(tree), splitters, dropped
 
     tree, splitters, dropped = _smap(
@@ -180,11 +183,14 @@ def _update(index: DistIndex, pts, mask, mesh, op: str, slack: float):
         rp, rm, dropped = _route_exchange(
             p, k, index.splitters, axis, n_shards, cap,
             meta["curve"], meta["bits"], meta["coord_bits"])
+        # _impl spellings: delete's while_loop under a nested jit is the
+        # documented jax 0.4.x shard_map miscompile; insert matches for
+        # symmetry (and to keep one trace instead of two)
         if op == "insert":
-            tree = spac.insert(tree, rp, rm, max_overflow_rows=min(
+            tree = spac.insert_impl(tree, rp, rm, max_overflow_rows=min(
                 64, tree.capacity_rows))
         else:
-            tree = spac.delete(tree, rp, rm)
+            tree = spac.delete_impl(tree, rp, rm)
         return _stack(tree), dropped
 
     tree, dropped = _smap(

@@ -123,12 +123,15 @@ def _route(tree: SpacTree, codes):
 # construction (paper Alg. 3)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("phi", "curve", "bits",
-                                             "coord_bits", "capacity_rows"))
-def build(points, mask=None, *, phi: int = 32, curve: str = "hilbert",
-          bits: int = 16, coord_bits: int = 30,
-          capacity_rows: int | None = None) -> SpacTree:
-    """BuildSPaCTree: fused encode+sort, then chunk into phi-blocked rows."""
+def build_impl(points, mask=None, *, phi: int = 32, curve: str = "hilbert",
+               bits: int = 16, coord_bits: int = 30,
+               capacity_rows: int | None = None) -> SpacTree:
+    """BuildSPaCTree: fused encode+sort, then chunk into phi-blocked rows.
+
+    Unjitted spelling — the only legal call inside a shard_map region
+    (jax 0.4.x miscompiles a nested jit there; see ROADMAP "Contracts",
+    rule jit-in-shard-map). Single-device callers use :data:`build`.
+    """
     n, dim = points.shape
     points = points.astype(jnp.int32)
     if mask is None:
@@ -169,15 +172,22 @@ def build(points, mask=None, *, phi: int = 32, curve: str = "hilbert",
                     phi=phi, curve=curve, bits=bits, coord_bits=coord_bits)
 
 
+build = jax.jit(build_impl, static_argnames=("phi", "curve", "bits",
+                                             "coord_bits", "capacity_rows"))
+
+
 # ---------------------------------------------------------------------------
 # batch insertion (paper Alg. 4)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("max_overflow_rows", "sort_rows"))
-def insert(tree: SpacTree, new_pts, new_mask=None, *,
-           max_overflow_rows: int = 64, sort_rows: bool = False) -> SpacTree:
+def insert_impl(tree: SpacTree, new_pts, new_mask=None, *,
+                max_overflow_rows: int = 64,
+                sort_rows: bool = False) -> SpacTree:
     """Batch insertion. ``sort_rows=True`` disables the partial-order
-    relaxation (the CPAM-like total-order baseline of Fig. 3)."""
+    relaxation (the CPAM-like total-order baseline of Fig. 3).
+
+    Unjitted spelling for shard_map regions; use :data:`insert` outside.
+    """
     m, dim = new_pts.shape
     new_pts = new_pts.astype(jnp.int32)
     if new_mask is None:
@@ -318,14 +328,21 @@ def insert(tree: SpacTree, new_pts, new_mask=None, *,
                         new_tree, failed)
 
 
+insert = jax.jit(insert_impl,
+                 static_argnames=("max_overflow_rows", "sort_rows"))
+
+
 # ---------------------------------------------------------------------------
 # batch deletion
 # ---------------------------------------------------------------------------
 
-@jax.jit
-def delete(tree: SpacTree, del_pts, del_mask=None) -> SpacTree:
+def delete_impl(tree: SpacTree, del_pts, del_mask=None) -> SpacTree:
     """Batch deletion: banded route, ranked multiset match, intra-row
     compaction, bbox/min_code refresh for touched rows, directory rebuild.
+
+    Unjitted spelling for shard_map regions — the delete path's
+    while_loop is exactly the construct the jax 0.4.x nested-jit
+    miscompile corrupts. Use :data:`delete` outside shard_map.
 
     Banded routing: a code equal to a row's min_code may have copies in
     *preceding* rows too (an equal-code run split across row boundaries
@@ -386,6 +403,9 @@ def delete(tree: SpacTree, del_pts, del_mask=None) -> SpacTree:
         tree, pts=pts_rows, codes=codes_rows, valid=valid_rows, count=count,
         active=active, bbox_lo=bbox_lo, bbox_hi=bbox_hi, min_code=min_code,
         order=order, num_rows=num_rows)
+
+
+delete = jax.jit(delete_impl)
 
 
 def grow(tree: SpacTree, capacity_rows: int) -> SpacTree:

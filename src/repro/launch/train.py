@@ -73,6 +73,8 @@ def main(argv=None):
         params, opt = state["params"], state["opt"]
         print(f"resumed from step {start}")
 
+    # contract: allow[uncached-jit] main() runs once per process; the
+    # train step is jitted exactly once and reused for the whole loop
     step_fn = jax.jit(make_train_step(cfg, tcfg))
     loop = FaultTolerantLoop(step_fn, ckpt_dir=args.ckpt_dir,
                              ckpt_every=10)

@@ -1,1 +1,9 @@
+"""LM serving (prefill/decode over fixed slots).
+
+Spatial-index serving — versioned snapshots, micro-batching, the
+workload driver — is :mod:`repro.serving`; this package is the LM-side
+reference for the shared jit-closure-caching template (see
+``repro.serve.engine`` module docs).
+"""
+
 from .engine import ServeEngine  # noqa: F401

@@ -1,4 +1,9 @@
-"""Batched serving engine: prefill + greedy decode over fixed slots.
+"""Batched LM serving engine: prefill + greedy decode over fixed slots.
+
+This is the *language-model* serving path, kept as the reference
+implementation of the closure-caching template; spatial-index serving
+lives in :mod:`repro.serving` (SpatialServer + MicroBatcher), which is
+what the benchmarks and the workload driver use.
 
 The engine owns jit'd prefill/decode_step closures for one (cfg,
 batch, max_len) signature — the serving hot path never retraces. A
@@ -30,22 +35,31 @@ from repro.models import transformer
 from repro.models.config import ModelCfg
 
 
+@functools.lru_cache(maxsize=None)
+def _closures(cfg: ModelCfg, max_len: int):
+    """jit'd (prefill, step) pair for one (cfg, max_len) signature.
+
+    Cached at module level so two engines with the same signature share
+    one trace — the same lru_cache-keyed closure-factory pattern as
+    ``repro.core.index._update_closure`` and the query-plan closures in
+    ``repro.core.engine`` (enforced tree-wide by the ``uncached-jit``
+    contract rule). ``ModelCfg`` is a frozen dataclass, hence hashable.
+    """
+    def prefill(params, tokens):
+        return transformer.prefill(params, tokens, cfg, max_len)
+
+    def step(params, cache, tok):
+        return transformer.decode_step(params, cache, tok, cfg)
+
+    return jax.jit(prefill), jax.jit(step)
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelCfg, params, max_len: int):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
-
-        @jax.jit
-        def _prefill(params, tokens):
-            return transformer.prefill(params, tokens, cfg, max_len)
-
-        @jax.jit
-        def _step(params, cache, tok):
-            return transformer.decode_step(params, cache, tok, cfg)
-
-        self._prefill = _prefill
-        self._step = _step
+        self._prefill, self._step = _closures(cfg, max_len)
 
     def generate(self, prompts, n_new: int, greedy: bool = True, key=None):
         """prompts: (B, P) int32. Returns (B, n_new) generated tokens."""

@@ -55,6 +55,9 @@ def _as_rows(x):
     arrays on host (device transfer is deferred to the flush)."""
     if isinstance(x, jax.Array):
         return jnp.atleast_2d(x)
+    # contract: allow[host-sync-in-dispatch] this branch only ever sees
+    # host payloads (device arrays returned above); np.asarray here is a
+    # host-side copy, not a device read
     return np.atleast_2d(np.asarray(x))
 
 

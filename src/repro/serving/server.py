@@ -108,6 +108,9 @@ class SpatialServer:
         self._log: list[tuple[str, object, object]] = []
         self.stats = {"inserts": 0, "deletes": 0, "commits": 0,
                       "recoveries": 0, "update_points": 0}
+        # device-side row counts not yet folded into update_points;
+        # commit() (already a barrier) reads them off-device
+        self._deferred_points: list = []
 
     @classmethod
     def build(cls, kind: str, points, *, window: int = 4, **make_kw):
@@ -154,13 +157,19 @@ class SpatialServer:
 
     # -- updates (async dispatch) ------------------------------------------
 
-    @staticmethod
-    def _live_rows(pts, mask) -> int:
-        # host-side popcount (masks arrive host-side in practice); only
-        # the masked path pays a potential device read, and only for
-        # stats accuracy
-        return (int(pts.shape[0]) if mask is None
-                else int(np.count_nonzero(np.asarray(mask))))
+    def _live_rows(self, pts, mask) -> int:
+        """Rows contributed to ``stats["update_points"]`` — without a
+        device sync on the dispatch path. A device mask is summed *on
+        device* and folded into the stat at the next ``commit()`` (a
+        barrier anyway), so ``update_points`` is exact at sync points
+        and a lower bound between them."""
+        if mask is None:
+            return int(pts.shape[0])
+        if isinstance(mask, jax.Array):
+            self._deferred_points.append(jnp.sum(mask, dtype=jnp.int32))
+            return 0
+        # host-side mask: popcount without touching the device
+        return int(np.count_nonzero(mask))
 
     def insert(self, pts, mask=None) -> int:
         """Dispatch a batch insert as version ``head+1``; returns the new
@@ -189,6 +198,9 @@ class SpatialServer:
             # backpressure: everything up to the evicted version must be
             # done before more updates pile on; its (now free) overflow
             # read doubles as an early deferred check
+            # contract: allow[host-sync-in-dispatch] window eviction is
+            # the designed backpressure point; waiting on the *evicted*
+            # version bounds device-queue depth without stalling head
             jax.block_until_ready(old.tree)
             if bool(getattr(old.tree, "overflowed", False)):
                 self._recover()
@@ -209,6 +221,11 @@ class SpatialServer:
         if hasattr(head.tree, "overflowed") and \
                 bool(head.tree.overflowed):
             head = self._recover()
+        if self._deferred_points:
+            # past the barrier these reads are free; see _live_rows
+            self.stats["update_points"] += sum(
+                int(x) for x in self._deferred_points)
+            self._deferred_points = []
         self._base, self._base_index = self._head, head
         self._log = []
         self._versions = OrderedDict({self._head: head})

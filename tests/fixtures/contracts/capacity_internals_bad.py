@@ -1,0 +1,9 @@
+# lint-as: src/repro/bench/fixture_tool.py
+"""Violates capacity-internals: a bench tool drives the capacity ladder
+by hand instead of letting the facade recover."""
+
+
+def force_room(idx, batch):
+    if idx.tree.overflowed:
+        idx = idx.grow(2 * idx.capacity_rows)
+    return idx.insert(batch)

@@ -1,0 +1,7 @@
+# lint-as: src/repro/serving/server.py
+"""Clean: serving/server.py holds the one sanctioned exception — the
+deferred sticky-overflow read at its sync points (and nothing else)."""
+
+
+def commit_check(tree):
+    return bool(getattr(tree, "overflowed", False))

@@ -1,0 +1,19 @@
+# lint-as: src/repro/bench/fixture_serve.py
+"""Violates donate-into-server three ways: a donated index flowing in
+by name, one constructed inline, and SpatialServer.build(donate=True).
+"""
+from repro.core import make_index
+from repro.serving import SpatialServer
+
+
+def by_name(pts):
+    idx = make_index("spac-h", pts, donate=True)
+    return SpatialServer(idx, window=4)
+
+
+def inline(pts):
+    return SpatialServer(make_index("spac-h", pts, donate=True))
+
+
+def via_build(pts):
+    return SpatialServer.build("spac-h", pts, donate=True)

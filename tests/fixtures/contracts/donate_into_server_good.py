@@ -1,0 +1,15 @@
+# lint-as: src/repro/bench/fixture_serve.py
+"""Clean: no donation reaches the server; donate=True is fine for a
+throwaway index that never gets wrapped."""
+from repro.core import make_index
+from repro.serving import SpatialServer
+
+
+def serve(pts):
+    idx = make_index("spac-h", pts)
+    return SpatialServer(idx, window=4)
+
+
+def bulk_load_only(pts, batch):
+    idx = make_index("spac-h", pts, donate=True)
+    return idx.insert(batch)

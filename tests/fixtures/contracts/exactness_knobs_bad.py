@@ -1,0 +1,10 @@
+# lint-as: src/repro/bench/fixture_driver.py
+"""Violates exactness-knobs: a caller outside the engine layer sizes
+the answer buffer and inspects truncation itself."""
+
+
+def count_in_box(dispatch, index, lo, hi):
+    res = dispatch.range_count(index, lo, hi, max_rows=128)
+    if res.truncated:
+        raise RuntimeError("buffer too small")
+    return res.count

@@ -1,0 +1,11 @@
+# lint-as: src/repro/core/engine.py
+"""Clean: the same knob-twiddling code is *allowed* here — the virtual
+path is the engine layer, which owns buffer sizing and truncation."""
+
+
+def _escalate(dispatch, index, lo, hi, max_rows):
+    res = dispatch.range_count(index, lo, hi, max_rows=max_rows)
+    while res.truncated:
+        max_rows *= 2
+        res = dispatch.range_count(index, lo, hi, max_rows=max_rows)
+    return res.count

@@ -1,0 +1,13 @@
+# lint-as: src/repro/serving/server.py
+"""Violates host-sync-in-dispatch: insert() blocks on the device and
+pulls the mask to host before returning."""
+import jax
+import numpy as np
+
+
+class SpatialServer:
+    def insert(self, pts, mask=None):
+        jax.block_until_ready(pts)
+        rows = int(np.asarray(mask).sum())
+        self.stats["update_points"] += rows
+        return self._publish(pts)

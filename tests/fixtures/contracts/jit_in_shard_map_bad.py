@@ -1,0 +1,20 @@
+# lint-as: src/repro/core/fixture_dist.py
+"""Violates jit-in-shard-map: the shard_map region calls a jitted
+callee (and constructs a jit inline)."""
+import functools
+
+import jax
+from jax.experimental.shard_map import shard_map
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def kernel(x, *, k=2):
+    return x * k
+
+
+def update(points, mesh, spec):
+    def local(p):
+        q = jax.jit(lambda a: a + 1)(p)   # jit built inside the region
+        return kernel(q)                  # jitted callee inside region
+    return shard_map(local, mesh=mesh, in_specs=spec,
+                     out_specs=spec)(points)

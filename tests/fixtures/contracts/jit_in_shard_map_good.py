@@ -1,0 +1,19 @@
+# lint-as: src/repro/core/fixture_dist.py
+"""Clean: the region calls the unjitted _impl spelling; the jitted
+alias exists at module level for single-device callers."""
+import jax
+from jax.experimental.shard_map import shard_map
+
+
+def kernel_impl(x, *, k=2):
+    return x * k
+
+
+kernel = jax.jit(kernel_impl, static_argnames=("k",))
+
+
+def update(points, mesh, spec):
+    def local(p):
+        return kernel_impl(p)
+    return shard_map(local, mesh=mesh, in_specs=spec,
+                     out_specs=spec)(points)

@@ -1,0 +1,17 @@
+# lint-as: src/repro/launch/fixture_tool.py
+"""Violates uncached-jit: one jit built per call in a function body,
+one per constructed object via a nested decorated def."""
+import jax
+
+
+def make_runner(fn):
+    return jax.jit(fn)
+
+
+class Engine:
+    def __init__(self, cfg):
+        @jax.jit
+        def _go(x):
+            return x + cfg.scale
+
+        self._go = _go

@@ -1,0 +1,19 @@
+# lint-as: src/repro/launch/fixture_tool.py
+"""Clean: module-level jit, plus the sanctioned lru_cache closure
+factory (the _update_closure / query-plan pattern)."""
+import functools
+
+import jax
+
+
+@jax.jit
+def step(x):
+    return x * 2
+
+
+@functools.lru_cache(maxsize=None)
+def closures(scale):
+    def go(x):
+        return x + scale
+
+    return jax.jit(go)

@@ -1,0 +1,190 @@
+"""Contract linter: fixture pairs per rule, pragma semantics, and the
+tree-wide gate (``src``/``benchmarks``/``examples`` must lint clean).
+
+The fixtures under ``tests/fixtures/contracts/`` carry a
+``# lint-as: <virtual path>`` first line so path-scoped rules (engine
+allowlist, serving dispatch scopes) can be exercised from here.
+"""
+
+import pathlib
+import textwrap
+
+import pytest
+
+from repro.analysis import RULES, lint_paths, lint_sources
+from repro.analysis.lint import main
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+FIXTURES = pathlib.Path(__file__).parent / "fixtures" / "contracts"
+
+RULE_NAMES = [cls.name for cls in RULES]
+
+
+def lint_fixture(name: str):
+    path = FIXTURES / name
+    return lint_sources({str(path): path.read_text()})
+
+
+def lint_snippet(source: str, path: str = "src/repro/bench/snippet.py"):
+    return lint_sources({path: textwrap.dedent(source)})
+
+
+# -- fixture pairs ---------------------------------------------------------
+
+@pytest.mark.parametrize("rule", RULE_NAMES)
+def test_bad_fixture_violates_its_rule(rule):
+    stem = rule.replace("-", "_")
+    res = lint_fixture(f"{stem}_bad.py")
+    hits = [d for d in res.diagnostics if d.rule == rule]
+    assert hits, f"{stem}_bad.py should violate {rule}; got " \
+                 f"{[d.render() for d in res.diagnostics]}"
+
+
+@pytest.mark.parametrize("rule", RULE_NAMES)
+def test_good_fixture_is_clean(rule):
+    stem = rule.replace("-", "_")
+    res = lint_fixture(f"{stem}_good.py")
+    assert res.ok, "\n".join(d.render() for d in res.diagnostics)
+    assert not res.suppressed, "good fixtures must be clean without pragmas"
+
+
+def test_every_rule_has_a_fixture_pair():
+    for rule in RULE_NAMES:
+        stem = rule.replace("-", "_")
+        assert (FIXTURES / f"{stem}_bad.py").is_file()
+        assert (FIXTURES / f"{stem}_good.py").is_file()
+
+
+def test_bad_fixtures_count_expected_violations():
+    # the three donate shapes: by name, inline, via .build
+    res = lint_fixture("donate_into_server_bad.py")
+    assert len([d for d in res.diagnostics
+                if d.rule == "donate-into-server"]) == 3
+    # block_until_ready + np.asarray
+    res = lint_fixture("host_sync_in_dispatch_bad.py")
+    assert len([d for d in res.diagnostics
+                if d.rule == "host-sync-in-dispatch"]) == 2
+    # jit built in region + jitted callee in region
+    res = lint_fixture("jit_in_shard_map_bad.py")
+    assert len([d for d in res.diagnostics
+                if d.rule == "jit-in-shard-map"]) == 2
+
+
+# -- pragma semantics ------------------------------------------------------
+
+SNIPPET_WITH_KNOB = """\
+def count(dispatch, index, lo, hi):
+    res = dispatch.range_count(index, lo, hi, max_rows=128)
+    return res.count
+"""
+
+
+def test_trailing_pragma_suppresses_one_rule_on_one_line():
+    src = SNIPPET_WITH_KNOB.replace(
+        "max_rows=128)",
+        "max_rows=128)  # contract: allow[exactness-knobs] fixture")
+    res = lint_snippet(src)
+    assert res.ok
+    assert [d.rule for d in res.suppressed] == ["exactness-knobs"]
+
+
+def test_comment_line_pragma_targets_next_code_line():
+    src = ("def count(dispatch, index, lo, hi):\n"
+           "    # contract: allow[exactness-knobs] fixture\n"
+           "    res = dispatch.range_count(index, lo, hi, max_rows=9)\n"
+           "    return res.count\n")
+    res = lint_snippet(src)
+    assert res.ok and len(res.suppressed) == 1
+
+
+def test_pragma_does_not_leak_to_other_lines_or_rules():
+    # pragma on line 2 must not cover the same violation on line 3,
+    # and an exactness pragma must not cover a capacity violation
+    src = ("def f(dispatch, index, lo, hi, idx):\n"
+           "    a = dispatch.range_count(index, lo, hi, max_rows=1)"
+           "  # contract: allow[exactness-knobs] fixture\n"
+           "    b = dispatch.range_count(index, lo, hi, max_rows=1)\n"
+           "    return a, b, idx.capacity_rows"
+           "  # contract: allow[exactness-knobs] wrong rule\n")
+    res = lint_snippet(src)
+    rules = sorted(d.rule for d in res.diagnostics)
+    assert "exactness-knobs" in rules          # line 3 still flagged
+    assert "capacity-internals" in rules       # wrong-rule pragma inert
+    assert "unused-pragma" in rules            # ...and reported stale
+    assert [d.rule for d in res.suppressed] == ["exactness-knobs"]
+
+
+def test_unknown_rule_in_pragma_is_a_lint_error():
+    src = SNIPPET_WITH_KNOB.replace(
+        "max_rows=128)",
+        "max_rows=128)  # contract: allow[exactness-nobs] typo")
+    res = lint_snippet(src)
+    assert any(d.rule == "bad-pragma" for d in res.diagnostics)
+
+
+def test_unused_pragma_is_a_lint_error():
+    res = lint_snippet("x = 1  # contract: allow[uncached-jit] stale\n")
+    assert [d.rule for d in res.diagnostics] == ["unused-pragma"]
+
+
+def test_pragma_in_string_literal_is_inert():
+    res = lint_snippet('msg = "# contract: allow[not-a-rule]"\n')
+    assert res.ok and not res.suppressed
+
+
+def test_suppressions_counted_in_summary():
+    src = SNIPPET_WITH_KNOB.replace(
+        "max_rows=128)",
+        "max_rows=128)  # contract: allow[exactness-knobs] fixture")
+    res = lint_snippet(src)
+    assert "1 suppressed" in res.summary()
+
+
+# -- the tree-wide gate ----------------------------------------------------
+
+LINTED = [str(REPO / p) for p in ("src", "benchmarks", "examples")]
+
+
+def test_tree_lints_clean():
+    res = lint_paths(LINTED)
+    assert res.ok, "\n".join(d.render() for d in res.diagnostics)
+    # the audit left justified escapes behind; they must stay counted
+    assert res.suppressed, "expected audited # contract: allow pragmas"
+
+
+def test_deleting_any_pragma_fails_the_lint():
+    """Acceptance criterion: every pragma in the tree is load-bearing —
+    removing it surfaces either its violation or unused-pragma."""
+    import repro.analysis.lint as lint_mod
+    from repro.analysis.pragmas import parse_pragmas
+
+    checked = 0
+    for path in lint_mod.discover(LINTED):
+        text = pathlib.Path(path).read_text()
+        lines = text.splitlines(keepends=True)
+        for pragma in parse_pragmas(text):
+            i = pragma.line - 1
+            pruned = "".join(lines[:i] + lines[i + 1:])
+            res = lint_sources({path: pruned})
+            assert not res.ok, (
+                f"{path}:{pragma.line}: pragma removable without "
+                f"failing lint")
+            checked += 1
+    assert checked >= 7, f"expected >=7 audited pragmas, found {checked}"
+
+
+# -- CLI -------------------------------------------------------------------
+
+def test_cli_exit_codes_and_summary(capsys, tmp_path):
+    assert main(LINTED) == 0
+    out = capsys.readouterr().out
+    assert "0 violation(s)" in out and "suppressed" in out
+
+    bad = tmp_path / "bad.py"
+    bad.write_text("import jax\n\n"
+                   "def f(g):\n"
+                   "    return jax.jit(g)\n")
+    assert main([str(bad)]) == 1
+    assert "uncached-jit" in capsys.readouterr().out
+
+    assert main([str(tmp_path / "nope")]) == 2
