@@ -1,11 +1,25 @@
-"""Roofline report: renders EXPERIMENTS.md §Roofline tables from the
-dry-run JSONL records (results/dryrun_*.jsonl).
+"""Roofline report: the spatial-kernel sweep (achieved FLOPs/bytes per
+kernel) plus the EXPERIMENTS.md §Roofline tables from the LM dry-run
+JSONL records (results/dryrun_*.jsonl).
 
-Each row: per-device compute/memory/collective seconds, dominant term,
-MODEL_FLOPS/HLO_FLOPS (useful fraction), resident state GiB, and the
-step-time lower bound max(terms) -> roofline fraction.
+Spatial sweep (``--spatial`` / ``--json``): per (backend, kernel) —
+kNN, range-count, batch insert — time the facade call the figure
+benchmarks time (same sizes as fig4/fig5/fig10), divide an analytic
+useful-work model (flops, minimum bytes moved) by the measured wall
+time, and report achieved GFLOP/s, GB/s and arithmetic intensity. The
+sweep runs under a ``repro.obs`` recorder: the model/achieved numbers
+are emitted as obs counters/gauges (``roofline.<kind>.<kernel>.*``)
+and the recorder's report — including the engine's own plan-cache and
+trace counters from the very same calls — lands in the ``--json``
+payload (baseline: ``results/roofline.json``).
 
-Run:  PYTHONPATH=src python -m benchmarks.roofline results/*.jsonl
+LM table: each row is per-device compute/memory/collective seconds,
+dominant term, MODEL_FLOPS/HLO_FLOPS (useful fraction), resident state
+GiB, and the step-time lower bound max(terms) -> roofline fraction.
+
+Run:  PYTHONPATH=src python -m benchmarks.roofline --spatial --n 20000
+      PYTHONPATH=src python -m benchmarks.roofline --json   # results/
+      PYTHONPATH=src python -m benchmarks.roofline results/*.jsonl
 """
 
 from __future__ import annotations
@@ -13,7 +27,114 @@ from __future__ import annotations
 import argparse
 import glob
 import json
+import math
 
+from repro import obs
+from repro.data import points as gen
+
+from . import common
+
+SPATIAL_KINDS = ("porth", "spac-h")
+DEFAULT_JSON = "results/roofline.json"
+
+
+# -- spatial-kernel roofline ------------------------------------------------
+
+def kernel_models(n: int, nq: int, k: int, dim: int, batch: int) -> dict:
+    """Analytic useful-work models: (flops, minimum bytes moved) per
+    kernel at float32. Deliberately *useful* work — a brute-force
+    distance matrix for kNN, one compare pass for range-count, a
+    resort-merge for insert — so achieved/peak reads as the price of
+    the index structure, mirroring MODEL_FLOPS/HLO_FLOPS in the LM
+    table."""
+    f32 = 4
+    return {
+        # nq*n distances (sub, mul, add per dim) + running k-min compare
+        "knn": (nq * n * (3 * dim + 1),
+                f32 * (n * dim + nq * dim + 2 * nq * k)),
+        # two bound compares per dim per (box, point) + the reduction
+        "range_count": (nq * n * (2 * dim + 1),
+                        f32 * (n * dim + 2 * nq * dim + nq)),
+        # merge a sorted batch into the sorted live set: compare-bound
+        "insert": ((n + batch) * max(1.0, math.log2(n + batch)),
+                   f32 * dim * (2 * n + 2 * batch)),
+    }
+
+
+def spatial_sweep(kinds=SPATIAL_KINDS, n: int = 20_000, nq: int = 256,
+                  k: int = 10, dist: str = "uniform", box_frac: int = 64,
+                  batch_ratio: float = 0.01, phi: int = 32,
+                  verbose: bool = True) -> dict:
+    """Time the fig4/fig5/fig10-shaped kernels per backend and attach
+    achieved-vs-model roofline numbers; returns the json-able payload
+    (including the obs report recorded over the sweep)."""
+    import jax
+
+    dim = 2
+    batch = max(int(n * batch_ratio), 64)
+    pts = common.points_for(dist, n)
+    ind_q, _ = common.knn_queries(dist, nq)
+    lo, hi = gen.query_boxes(jax.random.PRNGKey(9), nq, dim,
+                             gen.DEFAULT_HI // box_frac)
+    ins = common.points_for(dist, batch, seed=3)
+    models = kernel_models(n, nq, k, dim, batch)
+    results: dict = {}
+    with obs.recording() as rec_obs:
+        for kind in kinds:
+            idx = common.build_index(kind, pts, phi=phi,
+                                     capacity_points=n + batch)
+            timers = {
+                "knn": lambda: common.timed(idx.knn, ind_q, k),
+                "range_count": lambda: common.timed(idx.range_count,
+                                                    lo, hi),
+                "insert": lambda: common.timed(idx.insert, ins),
+            }
+            row: dict = {}
+            for kern, run_timed in timers.items():
+                t, _ = run_timed()
+                flops, byts = models[kern]
+                cell = {
+                    "time_s": t,
+                    "model_flops": flops,
+                    "model_bytes": byts,
+                    "achieved_gflops_s": flops / t / 1e9,
+                    "achieved_gbytes_s": byts / t / 1e9,
+                    "intensity_flop_per_byte": flops / byts,
+                }
+                row[kern] = cell
+                base = f"roofline.{kind}.{kern}"
+                obs.count(f"{base}.model_flops", flops)
+                obs.count(f"{base}.model_bytes", byts)
+                obs.gauge(f"{base}.gflops_s", cell["achieved_gflops_s"])
+                obs.gauge(f"{base}.gbytes_s", cell["achieved_gbytes_s"])
+            results[kind] = row
+            if verbose:
+                cells = " ".join(
+                    f"{kern} {row[kern]['time_s'] * 1e3:8.2f}ms "
+                    f"{row[kern]['achieved_gflops_s']:6.2f}GF/s"
+                    for kern in timers)
+                print(f"{kind:10s} {cells}", flush=True)
+        report = rec_obs.report()
+    return {"config": {"n": n, "nq": nq, "k": k, "dim": dim,
+                       "dist": dist, "batch": batch, "phi": phi},
+            "kinds": list(kinds), "results": results, "obs": report}
+
+
+def spatial_table(payload: dict) -> str:
+    hdr = (f"{'index':10s} {'kernel':12s} {'time_ms':>9s} "
+           f"{'GFLOP/s':>9s} {'GB/s':>8s} {'F/B':>7s}")
+    rows = [hdr, "-" * len(hdr)]
+    for kind, row in payload["results"].items():
+        for kern, c in row.items():
+            rows.append(
+                f"{kind:10s} {kern:12s} {c['time_s'] * 1e3:9.2f} "
+                f"{c['achieved_gflops_s']:9.2f} "
+                f"{c['achieved_gbytes_s']:8.2f} "
+                f"{c['intensity_flop_per_byte']:7.1f}")
+    return "\n".join(rows)
+
+
+# -- LM dry-run tables ------------------------------------------------------
 
 def load(paths):
     recs = {}
@@ -50,15 +171,39 @@ def table(recs, mesh="16x16"):
 
 
 def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("paths", nargs="*",
-                    default=sorted(glob.glob("results/dryrun_*.jsonl")))
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="dry-run jsonl records for the LM table "
+                    "(default: results/dryrun_*.jsonl)")
     ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--spatial", action="store_true",
+                    help="run the spatial-kernel roofline sweep")
+    ap.add_argument("--kinds", default=",".join(SPATIAL_KINDS))
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--nq", type=int, default=256)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--dist", default="uniform")
+    ap.add_argument("--json", nargs="?", const=DEFAULT_JSON, default=None,
+                    metavar="PATH", help="run the spatial sweep and "
+                    f"write its baseline (default {DEFAULT_JSON})")
     args = ap.parse_args()
-    if not args.paths:
-        print("no dry-run records found — run repro.launch.dryrun first")
+    if args.spatial or args.json:
+        print(f"== spatial-kernel roofline (n={args.n}, nq={args.nq}, "
+              f"k={args.k}, {args.dist}) ==")
+        payload = spatial_sweep(kinds=tuple(args.kinds.split(",")),
+                                n=args.n, nq=args.nq, k=args.k,
+                                dist=args.dist)
+        print(spatial_table(payload))
+        if args.json:
+            common.write_json(args.json, payload,
+                              "spatial-kernel roofline baseline")
         return
-    recs = load(args.paths)
+    paths = args.paths or sorted(glob.glob("results/dryrun_*.jsonl"))
+    if not paths:
+        print("no dry-run records found — run repro.launch.dryrun "
+              "first, or pass --spatial for the spatial-kernel sweep")
+        return
+    recs = load(paths)
     print(f"== roofline (per-device, mesh {args.mesh}) ==")
     print(table(recs, args.mesh))
     n_ok = sum(1 for r in recs.values() if r.get("ok"))

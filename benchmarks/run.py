@@ -71,8 +71,10 @@ def main():
         fig9_3d.run(n=max(n // 2, 10_000))
 
     if "roofline" not in skip:
-        section("Roofline — from dry-run records (results/*.jsonl)")
+        section(f"Roofline — spatial kernels (n={n}) + dry-run records")
         from . import roofline
+        print(roofline.spatial_table(roofline.spatial_sweep(
+            n=n, nq=max(nq // 2, 100), verbose=False)))
         paths = sorted(glob.glob("results/dryrun_*.jsonl"))
         if paths:
             recs = roofline.load(paths)

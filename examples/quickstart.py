@@ -59,6 +59,27 @@ agree = bool(jnp.allclose(jnp.sort(d2_p, axis=1), jnp.sort(d2, axis=1)))
 print("P-Orth agrees with SPaC on kNN distances:", agree)
 assert agree
 
+# ------------------------------------------------- observability
+# Wrap any section in a span to trace it; counters from the engine
+# (plan-cache hits, escalation rounds) land in the same recorder. The
+# deferred read pattern keeps dispatch paths sync-free: attach the
+# in-flight array, and the value is read once at report()/commit().
+from repro import obs
+
+with obs.recording() as rec:
+    with obs.span("quickstart.knn", queries=len(qpts)) as sp:
+        d2_t, _ = idx.knn(qpts, k=10)
+        sp.defer("min_d2", d2_t.min())    # no host sync here
+    report = rec.report()                 # <- the barrier: resolves it
+print(f"traced knn: {report['spans']['quickstart.knn']['mean']:.2f}ms, "
+      f"engine traces so far: {report['counters'].get('engine.trace', 0)}")
+
+trace_path = "/tmp/quickstart_trace.json"
+obs.write_chrome_trace(rec, trace_path)
+print(f"wrote {trace_path} — inspect with: "
+      f"PYTHONPATH=src python -m repro.obs.view {trace_path} "
+      f"(or load in Perfetto)")
+
 # ------------------------------------------------- contract linting
 # the invariants this example leans on (exact-by-default queries,
 # automatic capacity, snapshot-safe serving) are machine-checked; run

@@ -450,8 +450,70 @@ class UncachedJit(Rule):
                     cached=cached, in_loop=here_loop)
 
 
+# ---------------------------------------------------------------------------
+# 7. obs-deferred-sync
+# ---------------------------------------------------------------------------
+
+class ObsDeferredSync(Rule):
+    """``repro.obs`` promises that instrumenting a dispatch path adds
+    no host syncs: device values are *attached* (``Span.defer`` /
+    ``Recorder.add_deferred``) and read only in ``Recorder.resolve``,
+    which callers invoke at an existing barrier. A stray
+    ``block_until_ready`` / ``.item()`` / ``device_get`` / host
+    ``asarray`` anywhere else in the package would silently reintroduce
+    the sync the subsystem exists to avoid."""
+
+    name = "obs-deferred-sync"
+    description = ("repro.obs reads device values only inside "
+                   "Recorder.resolve (the sanctioned barrier drain)")
+
+    PACKAGE = "repro/obs/"
+    SANCTIONED = ("resolve",)
+
+    def check(self, mod: ModuleInfo,
+              ctx: LintContext) -> Iterator[Diagnostic]:
+        if self.PACKAGE not in mod.path.replace("\\", "/"):
+            return
+        yield from self._visit(mod.tree.body, mod)
+
+    def _visit(self, body, mod: ModuleInfo) -> Iterator[Diagnostic]:
+        stack = list(body)
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if node.name not in self.SANCTIONED:
+                    stack.extend(node.body)
+                continue
+            if isinstance(node, ast.Call):
+                yield from self._check_call(node, mod)
+            stack.extend(ast.iter_child_nodes(node))
+
+    def _check_call(self, node: ast.Call,
+                    mod: ModuleInfo) -> Iterator[Diagnostic]:
+        callee = _last(dotted_name(node.func))
+        if callee == "block_until_ready":
+            yield self.diag(
+                mod, node, "block_until_ready outside Recorder.resolve; "
+                "attach the value (Span.defer / add_deferred) and let "
+                "the barrier drain read it")
+        elif isinstance(node.func, ast.Attribute) and \
+                node.func.attr == "item" and not node.args:
+            yield self.diag(
+                mod, node, ".item() outside Recorder.resolve is a "
+                "device sync; defer the read to the barrier drain")
+        elif callee == "device_get":
+            yield self.diag(
+                mod, node, "device_get outside Recorder.resolve; defer "
+                "the read to the barrier drain")
+        elif mod.resolve(node.func) == "numpy.asarray":
+            yield self.diag(
+                mod, node, "np.asarray outside Recorder.resolve pulls "
+                "device values to host; defer the read to the barrier "
+                "drain")
+
+
 RULES: tuple[type[Rule], ...] = (
     JitInShardMap, ExactnessKnobs, CapacityInternals, DonateIntoServer,
-    HostSyncInDispatch, UncachedJit)
+    HostSyncInDispatch, UncachedJit, ObsDeferredSync)
 
 RULE_NAMES: tuple[str, ...] = tuple(r.name for r in RULES)

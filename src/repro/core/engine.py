@@ -45,6 +45,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from ..kernels.knn import ops as knn_ops
 from . import queries
 from .leafstore import BIG
@@ -108,14 +109,17 @@ def _knn_closure(q: int, dim: int, dtype: str, k: int, route: str,
     View shapes are handled by jax's trace cache inside the closure (a
     retrace bumps the trace counter), so a fixed-shape query stream
     compiles exactly once."""
+    obs.count("engine.plan_miss")
     if route == "frontier":
         def run(view, qpts):
             _STATS["traces"] += 1
+            obs.count("engine.trace")
             d2, ids = queries.knn_impl(view, qpts, k, param)
             return canonical_knn(d2, ids)
     else:
         def run(view, qpts):
             _STATS["traces"] += 1
+            obs.count("engine.trace")
             pts, ok = queries.flatten_view(view)
             d2, ids = knn_ops.knn_bruteforce_impl(qpts, pts, ok, k=k,
                                                   impl=param)
@@ -125,8 +129,11 @@ def _knn_closure(q: int, dim: int, dtype: str, k: int, route: str,
 
 @functools.lru_cache(maxsize=None)
 def _range_count_closure(q: int, dim: int, dtype: str, max_rows: int):
+    obs.count("engine.plan_miss")
+
     def run(view, lo, hi):
         _STATS["traces"] += 1
+        obs.count("engine.trace")
         return queries.range_count_impl(view, lo, hi, max_rows)
     return jax.jit(run)
 
@@ -134,8 +141,11 @@ def _range_count_closure(q: int, dim: int, dtype: str, max_rows: int):
 @functools.lru_cache(maxsize=None)
 def _range_list_closure(q: int, dim: int, dtype: str, max_rows: int,
                         cap: int):
+    obs.count("engine.plan_miss")
+
     def run(view, lo, hi):
         _STATS["traces"] += 1
+        obs.count("engine.trace")
         return queries.range_list_impl(view, lo, hi, max_rows, cap)
     return jax.jit(run)
 
@@ -187,6 +197,8 @@ class QueryEngine:
         row*C+slot, -1 padded), canonically (d2, id)-ordered."""
         rows, cols, dim = view.pts.shape
         route, param = self.plan_knn(rows, cols, impl)
+        obs.count("engine.plan_request")
+        obs.count(f"engine.route.{route}")
         fn = _knn_closure(qpts.shape[0], dim, str(qpts.dtype), int(k),
                           route, param)
         return fn(view, qpts)
@@ -198,13 +210,18 @@ class QueryEngine:
         key = ("range_count", lo.shape[0], lo.shape[-1], str(lo.dtype))
         max_rows = min(_pow2(self._buckets.get(key, self.start_rows)),
                        _pow2(rows))
+        obs.count("engine.plan_request")
+        rounds = 0
         while True:
             fn = _range_count_closure(lo.shape[0], lo.shape[-1],
                                       str(lo.dtype), max_rows)
             cnt, trunc = fn(view, lo, hi)
             if max_rows >= rows or not bool(jnp.any(trunc)):
                 self._buckets[key] = max_rows
+                obs.observe("engine.escalation_rounds", rounds)
                 return cnt
+            rounds += 1
+            obs.count("engine.escalation")
             max_rows = min(2 * max_rows, _pow2(rows))
 
     def range_list(self, view: queries.LeafView, lo, hi):
@@ -223,6 +240,8 @@ class QueryEngine:
         # exceed max_rows*C), so clamp — keeps the recorded bucket
         # equal to the actual output width when C isn't a power of two
         cap = min(_pow2(cap), max_rows * cols)
+        obs.count("engine.plan_request")
+        rounds = 0
         while True:
             fn = _range_list_closure(lo.shape[0], lo.shape[-1],
                                      str(lo.dtype), max_rows, cap)
@@ -232,7 +251,10 @@ class QueryEngine:
             need_cap = cap < max_cnt
             if not (need_rows or need_cap):
                 self._buckets[key] = (max_rows, cap)
+                obs.observe("engine.escalation_rounds", rounds)
                 return ids, cnt
+            rounds += 1
+            obs.count("engine.escalation")
             if need_rows:
                 max_rows = min(2 * max_rows, _pow2(rows))
             if need_cap:
@@ -250,6 +272,8 @@ class QueryEngine:
         from . import distributed as D
         rows, cols = index.tree.pts.shape[-3], index.tree.pts.shape[-2]
         route, param = self.plan_knn(rows, cols, impl)
+        obs.count("engine.plan_request")
+        obs.count(f"engine.route.{route}")
         if route == "frontier":
             return D.knn(index, qpts, k, mesh, chunk=param)
         return D.knn(index, qpts, k, mesh, impl="flat", kernel=param)
@@ -264,10 +288,15 @@ class QueryEngine:
                str(lo.dtype))
         max_rows = min(_pow2(self._buckets.get(key, self.start_rows)),
                        _pow2(rows))
+        obs.count("engine.plan_request")
+        rounds = 0
         while True:
             cnt, trunc = D.range_count(index, lo, hi, mesh,
                                        max_rows=max_rows)
             if max_rows >= rows or not bool(jnp.any(trunc)):
                 self._buckets[key] = max_rows
+                obs.observe("engine.escalation_rounds", rounds)
                 return cnt
+            rounds += 1
+            obs.count("engine.escalation")
             max_rows = min(2 * max_rows, _pow2(rows))

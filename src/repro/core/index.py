@@ -56,6 +56,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from . import baselines, porth, queries, spac
 from .engine import QueryEngine
 
@@ -269,6 +270,7 @@ def _update_closure(kind: str, op: str, m: int, dim: int, dtype: str,
     Tree shapes are handled by jax's own trace cache inside the closure, so
     a fixed-shape update stream compiles exactly once. ``donate`` releases
     the old tree's buffers to the update (serving mode)."""
+    obs.count("index.update_plan_miss")
     backend = get_backend(kind)
     fn = backend.insert if op == "insert" else backend.delete
     kw = dict(pkey)
@@ -418,6 +420,7 @@ class SpatialIndex:
                                         extra=dict(capacity_rows=rows))
                 if int(tree.size) == expected:
                     break
+                obs.count("index.rebuild_retry")
                 rows = 2 * rows
             else:
                 raise RuntimeError(
@@ -439,16 +442,20 @@ class SpatialIndex:
         live = int(tree.size) + pts.shape[0]
         need = _round_capacity(capacity_for(live, self.phi, b.cap_slack))
         mor = int(self._params.get("max_overflow_rows", 64))
+        recovery = obs.span("index.recover_insert", kind=self.kind).begin()
         for attempt in range(4):
             cap = max(need << attempt, 2 * tree.pts.shape[0])
+            obs.count("index.grow" if attempt == 0 else "index.compact")
             tree = (b.grow(tree, cap) if attempt == 0
                     else b.compact(tree, cap))
             mor = min(4 * mor, cap)
             out = self._run_update("insert", tree, pts, mask,
                                    extra=dict(max_overflow_rows=mor))
             if not bool(out.overflowed):
+                recovery.set(attempts=attempt + 1, capacity_rows=cap).end()
                 return out
             tree = dataclasses.replace(out, overflowed=jnp.asarray(False))
+        recovery.set(failed=True).end()
         raise RuntimeError(
             f"{self.kind}: insert of {pts.shape[0]} points still overflows "
             f"at capacity_rows={cap}")
@@ -578,6 +585,7 @@ def make_index(kind: str, points, mask=None, *, phi: int = 32,
                  or int(tree.size) != expected)
         if not short:
             break
+        obs.count("index.build_retry")
         # jump at least to the heuristic (explicit caps can be tiny), then
         # keep doubling
         cap = max(2 * cap,

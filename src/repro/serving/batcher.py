@@ -47,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core.engine import _pow2
 
 
@@ -90,7 +91,7 @@ class Ticket:
 
     def result(self):
         if not self._done:
-            self._batcher.flush()
+            self._batcher.flush(reason="result")
         assert self._done, "flush did not resolve this ticket"
         return self._value
 
@@ -133,7 +134,7 @@ class MicroBatcher:
         # answering them from a newer version would silently break the
         # snapshot attribution, so drain first
         if self._pending_rows and value is not self._target:
-            self.flush()
+            self.flush(reason="retarget")
         self._target = value
 
     # -- submission --------------------------------------------------------
@@ -160,13 +161,16 @@ class MicroBatcher:
 
     def _enqueue(self, key: tuple, arrays: tuple, rows: int) -> Ticket:
         t = Ticket(self)
-        self._groups.setdefault(key, []).append((t, arrays, rows))
+        now = self._clock()
+        self._groups.setdefault(key, []).append((t, arrays, rows, now))
         self._pending_rows += rows
+        obs.gauge("batcher.queue_depth", self._pending_rows)
         if self._oldest is None:
-            self._oldest = self._clock()
-        if (self._pending_rows >= self.max_batch
-                or self._clock() - self._oldest >= self.max_delay_s):
-            self.flush()
+            self._oldest = now
+        if self._pending_rows >= self.max_batch:
+            self.flush(reason="size")
+        elif now - self._oldest >= self.max_delay_s:
+            self.flush(reason="deadline")
         return t
 
     @property
@@ -181,7 +185,7 @@ class MicroBatcher:
         number of engine calls issued."""
         if (self._oldest is not None
                 and self._clock() - self._oldest >= self.max_delay_s):
-            return self.flush()
+            return self.flush(reason="deadline")
         return 0
 
     # -- execution ---------------------------------------------------------
@@ -192,36 +196,46 @@ class MicroBatcher:
             raise ValueError("MicroBatcher.target is not set")
         return t
 
-    def flush(self) -> int:
+    def flush(self, *, reason: str = "explicit") -> int:
         """Execute every pending group as one pow2-padded batch each;
-        returns the number of batched engine calls issued."""
+        returns the number of batched engine calls issued. ``reason``
+        (size | deadline | result | retarget | explicit) is recorded on
+        the ``batcher.flush.<reason>`` obs counter."""
         groups, self._groups = self._groups, {}
         self._pending_rows, self._oldest = 0, None
         if not groups:
             return 0
+        obs.count(f"batcher.flush.{reason}")
         target = self._resolve_target()
+        now = self._clock()
         calls = 0
         for key, reqs in groups.items():
-            self._run_group(target, key, reqs)
+            self._run_group(target, key, reqs, now)
             calls += 1
         self.flushes += calls
         return calls
 
-    def _run_group(self, target, key: tuple, reqs: list) -> None:
+    def _run_group(self, target, key: tuple, reqs: list, now) -> None:
         op = key[0]
         q = sum(r[2] for r in reqs)
-        cols = [_concat_pad([r[1][i] for r in reqs], q)
-                for i in range(len(reqs[0][1]))]
-        if op == "knn":
-            d2, ids = target.knn(cols[0], key[1], impl=key[4])
-            outs = (d2, ids)
-        elif op == "range_count":
-            outs = (target.range_count(cols[0], cols[1]),)
-        else:
-            ids, cnt = target.range_list(cols[0], cols[1])
-            outs = (ids, cnt)
+        obs.count("batcher.requests", len(reqs))
+        obs.observe("batcher.coalesce_rows", q)
+        obs.observe("batcher.pad_rows", _pow2(q) - q)
+        for _, _, _, ts in reqs:
+            obs.observe("batcher.wait_s", now - ts)
+        with obs.span("batcher.flush", op=op, rows=q, reqs=len(reqs)):
+            cols = [_concat_pad([r[1][i] for r in reqs], q)
+                    for i in range(len(reqs[0][1]))]
+            if op == "knn":
+                d2, ids = target.knn(cols[0], key[1], impl=key[4])
+                outs = (d2, ids)
+            elif op == "range_count":
+                outs = (target.range_count(cols[0], cols[1]),)
+            else:
+                ids, cnt = target.range_list(cols[0], cols[1])
+                outs = (ids, cnt)
         start = 0
-        for ticket, _, rows in reqs:
+        for ticket, _, rows, _ts in reqs:
             sl = tuple(o[start: start + rows] for o in outs)
             ticket._resolve(sl if len(sl) > 1 else sl[0])
             start += rows

@@ -17,11 +17,21 @@ in the pipelined serving pattern:
    update stall, i.e. whatever the queries did not hide.
 
 Recorded ops: ``insert`` / ``delete`` (dispatch latency), ``knn`` /
-``range`` (request submit -> result, including device wait), ``commit``
-(exposed update stall). Warmup steps run the identical shapes first and
-are dropped, so jit compiles and the query engine's pow2
-bucket-escalation retraces never pollute a percentile (the
-first-timed-batch skew the old ``launch/serve.py`` loop had).
+``range`` (request submit -> result, including device wait) plus their
+``_dispatch`` / ``_wait`` segments (host submit+flush time vs device
+wait — the split that attributes a round-trip), and ``commit`` (exposed
+update stall). Warmup steps run the identical shapes first and are
+dropped, so jit compiles and the query engine's pow2 bucket-escalation
+retraces never pollute a percentile (the first-timed-batch skew the old
+``launch/serve.py`` loop had).
+
+Observability (PR 7): percentiles come from ``repro.obs`` histograms —
+install a recorder (or pass ``--obs-trace``) and the same sink collects
+the library's own counters/spans (plan-cache traffic, batcher queue
+depth/pad waste, commit stalls) and exports a Perfetto-viewable chrome
+trace; ``--attributed`` replays one scenario obs-off vs obs-on
+side-by-side and writes the attributed kNN round-trip baseline
+(``results/serve_trace.json``).
 
 Scenarios are ``repro.data.points.SCENARIOS``: churn over each point
 distribution (uniform / sweepline / varden) plus the dynamic shapes
@@ -44,6 +54,7 @@ import time
 import jax
 import numpy as np
 
+from .. import obs
 from ..data import points as gen
 from .batcher import MicroBatcher
 from .metrics import LatencyRecorder
@@ -51,6 +62,8 @@ from .server import SpatialServer
 
 DEFAULT_KINDS = ("porth", "spac-h")
 DEFAULT_JSON = "results/serve_latency.json"
+DEFAULT_OBS_TRACE = "results/obs_trace.json"
+DEFAULT_SERVE_TRACE = "results/serve_trace.json"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,7 +115,9 @@ def run_one(kind: str, scenario: str, cfg: DriverCfg,
     build_s = time.perf_counter() - t0
     batcher = MicroBatcher(max_batch=cfg.queries,
                            max_delay_s=cfg.max_delay_ms / 1e3)
-    rec = LatencyRecorder()
+    # share the installed obs recorder (if any) so latency histograms,
+    # the library's own counters/spans, and trace export use one sink
+    rec = LatencyRecorder(recorder=obs.recorder())
     measured_updates = 0
     for s, step in enumerate(trace.steps):
         if s == cfg.warmup:
@@ -122,13 +137,23 @@ def run_one(kind: str, scenario: str, cfg: DriverCfg,
         t1 = time.perf_counter()
         knn_tickets = [batcher.submit_knn(qpts[i], cfg.k)
                        for i in range(cfg.queries)]
-        jax.block_until_ready([t.result() for t in knn_tickets])
-        rec.record("knn", time.perf_counter() - t1, cfg.queries)
+        answers = [t.result() for t in knn_tickets]
+        t2 = time.perf_counter()       # dispatched: host work done
+        jax.block_until_ready(answers)
+        t3 = time.perf_counter()       # device drained
+        rec.record("knn", t3 - t1, cfg.queries, start=t1)
+        rec.record("knn_dispatch", t2 - t1, cfg.queries)
+        rec.record("knn_wait", t3 - t2, cfg.queries)
         t1 = time.perf_counter()
         rng_tickets = [batcher.submit_range_count(lo[i], hi[i])
                        for i in range(cfg.queries)]
-        jax.block_until_ready([t.result() for t in rng_tickets])
-        rec.record("range", time.perf_counter() - t1, cfg.queries)
+        answers = [t.result() for t in rng_tickets]
+        t2 = time.perf_counter()
+        jax.block_until_ready(answers)
+        t3 = time.perf_counter()
+        rec.record("range", t3 - t1, cfg.queries, start=t1)
+        rec.record("range_dispatch", t2 - t1, cfg.queries)
+        rec.record("range_wait", t3 - t2, cfg.queries)
         with rec.timer("commit"):                   # exposed stall
             srv.commit()
         if s >= cfg.warmup:
@@ -176,6 +201,86 @@ def run(kinds=DEFAULT_KINDS, scenarios=gen.SCENARIOS,
     return payload
 
 
+def _p50(stats: dict | None) -> float:
+    return float((stats or {}).get("p50_ms", 0.0))
+
+
+def run_attributed(kinds=DEFAULT_KINDS, scenario: str = "uniform",
+                   cfg: DriverCfg = DriverCfg(),
+                   verbose: bool = True) -> dict:
+    """Replay one scenario per backend twice — obs disabled, then obs
+    enabled — and attribute the kNN round-trip from the enabled run's
+    obs data: batcher queue wait, host dispatch (plan-cache lookup +
+    launch), pow2 buffer escalation, device wait. The side-by-side p50s
+    are the recorded evidence that enabling obs does not regress the
+    round-trip (acceptance: < 5%); the attributed segments are the
+    serve-latency baseline (``results/serve_trace.json``)."""
+    payload = {"config": dataclasses.asdict(cfg), "scenario": scenario,
+               "kinds": list(kinds), "results": {}}
+    for kind in kinds:
+        assert not obs.enabled(), "attributed baseline needs obs off"
+        off = run_one(kind, scenario, cfg)
+        with obs.recording() as rec_obs:
+            on = run_one(kind, scenario, cfg)
+            report = rec_obs.report()
+        hists, counters = report["hists"], report["counters"]
+        lat_off, lat_on = off["latency_ms"], on["latency_ms"]
+        p50_off, p50_on = _p50(lat_off.get("knn")), _p50(lat_on.get("knn"))
+        wait = hists.get("batcher.wait_s", {})
+        esc = hists.get("engine.escalation_rounds", {})
+        requests = counters.get("engine.plan_request", 0)
+        misses = counters.get("engine.plan_miss", 0)
+        entry = {
+            "obs_off": {"latency_ms": lat_off,
+                        "throughput": off["throughput"]},
+            "obs_on": {"latency_ms": lat_on,
+                       "throughput": on["throughput"]},
+            "knn_p50_ms": {"obs_off": p50_off, "obs_on": p50_on,
+                           "obs_overhead_pct": 0.0 if not p50_off else
+                           100.0 * (p50_on - p50_off) / p50_off},
+            # round-trip attribution (ms at p50, from the obs-on run):
+            # queue wait happens before dispatch, so segments sum to
+            # roughly wait + round_trip for a coalesced request
+            "knn_attribution_ms": {
+                "batcher_wait_p50": wait.get("p50", 0.0) * 1e3,
+                "dispatch_p50": _p50(lat_on.get("knn_dispatch")),
+                "device_wait_p50": _p50(lat_on.get("knn_wait")),
+                "round_trip_p50": p50_on,
+            },
+            "plan_cache": {
+                "requests": requests, "misses": misses,
+                "hit_rate": 0.0 if not requests else
+                (requests - misses) / requests,
+                "traces": counters.get("engine.trace", 0),
+            },
+            "escalation": {
+                "calls": esc.get("count", 0),
+                "rounds_p50": esc.get("p50", 0.0),
+                "rounds_max": esc.get("max", 0.0),
+                "extra_rounds": counters.get("engine.escalation", 0),
+            },
+            "batcher": {
+                "coalesce_rows_p50":
+                    hists.get("batcher.coalesce_rows", {}).get("p50", 0.0),
+                "pad_rows_p50":
+                    hists.get("batcher.pad_rows", {}).get("p50", 0.0),
+                "flushes": {k.split(".", 2)[2]: v
+                            for k, v in counters.items()
+                            if k.startswith("batcher.flush.")},
+            },
+        }
+        payload["results"][kind] = entry
+        if verbose:
+            a = entry["knn_attribution_ms"]
+            print(f"[{kind}/{scenario}] knn p50 obs_off={p50_off:.2f}ms "
+                  f"obs_on={p50_on:.2f}ms "
+                  f"({entry['knn_p50_ms']['obs_overhead_pct']:+.1f}%) | "
+                  f"wait={a['batcher_wait_p50']:.2f} "
+                  f"dispatch={a['dispatch_p50']:.2f} "
+                  f"device={a['device_wait_p50']:.2f}", flush=True)
+    return payload
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--kinds", default=",".join(DEFAULT_KINDS),
@@ -198,7 +303,29 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="tiny end-to-end trace for CI: one backend, "
                     "every scenario, seconds not minutes")
+    ap.add_argument("--obs-trace", nargs="?", const=DEFAULT_OBS_TRACE,
+                    default=None, metavar="PATH",
+                    help="record the run through repro.obs and export a "
+                    "chrome trace (view: python -m repro.obs.view PATH; "
+                    f"default {DEFAULT_OBS_TRACE})")
+    ap.add_argument("--attributed", nargs="?", const=DEFAULT_SERVE_TRACE,
+                    default=None, metavar="PATH",
+                    help="obs-off vs obs-on side-by-side on the first "
+                    "--scenarios entry, with the kNN round-trip broken "
+                    "into batcher-wait/dispatch/device segments "
+                    f"(default {DEFAULT_SERVE_TRACE})")
     args = ap.parse_args(argv)
+    rec_obs = obs.install(obs.Recorder()) if args.obs_trace else None
+
+    def _export_obs():
+        if rec_obs is None:
+            return
+        os.makedirs(os.path.dirname(args.obs_trace) or ".", exist_ok=True)
+        obs.write_chrome_trace(rec_obs, args.obs_trace)
+        obs.uninstall()
+        print(f"wrote obs chrome trace -> {args.obs_trace} "
+              f"(view: python -m repro.obs.view {args.obs_trace})")
+
     if args.smoke:
         cfg = DriverCfg(n=1500, batch=128, steps=2, warmup=1, queries=16,
                         k=5, seed=args.seed)
@@ -206,14 +333,28 @@ def main(argv=None):
         ops = {op for r in payload["results"]["spac-h"].values()
                for op, s in r["latency_ms"].items() if s["count"]}
         assert {"insert", "delete", "knn", "range", "commit"} <= ops, ops
+        _export_obs()
         print("serving driver smoke OK")
         return
     cfg = DriverCfg(n=args.n, batch=args.batch, steps=args.steps,
                     warmup=args.warmup, queries=args.queries, k=args.k,
                     window=args.window, max_delay_ms=args.max_delay_ms,
                     seed=args.seed)
+    if args.attributed:
+        assert rec_obs is None, \
+            "--attributed manages its own recorder; drop --obs-trace"
+        scenario = args.scenarios.split(",")[0]
+        payload = run_attributed(kinds=tuple(args.kinds.split(",")),
+                                 scenario=scenario, cfg=cfg)
+        os.makedirs(os.path.dirname(args.attributed) or ".",
+                    exist_ok=True)
+        with open(args.attributed, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
+        print(f"wrote attributed serve baseline -> {args.attributed}")
+        return
     payload = run(kinds=args.kinds.split(","),
                   scenarios=args.scenarios.split(","), cfg=cfg)
+    _export_obs()
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         with open(args.json, "w") as f:

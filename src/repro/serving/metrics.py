@@ -7,6 +7,13 @@ p50/p95/p99 (plus mean/min/max) only at report time. Wall-clock
 throughput (sustained q/s, update-points/s) is tracked separately so a
 pipelined run is credited for overlap: op latencies can sum to more
 than the wall window when updates hide behind queries.
+
+Since PR 7 the samples live in :class:`repro.obs.Hist` histograms
+(under the ``lat.`` prefix) instead of a private list-per-op — pass the
+driver's installed :class:`repro.obs.Recorder` and the percentiles, the
+library's own counters/spans, and the exported trace all come from one
+sink; with no recorder the class owns a private one and behaves exactly
+as before.
 """
 
 from __future__ import annotations
@@ -17,7 +24,12 @@ from collections import defaultdict
 
 import numpy as np
 
+from .. import obs
+
 PERCENTILES = (50.0, 95.0, 99.0)
+
+#: histogram-name prefix LatencyRecorder claims inside a shared Recorder
+LAT_PREFIX = "lat."
 
 
 def summarize(samples_s) -> dict:
@@ -35,34 +47,55 @@ def summarize(samples_s) -> dict:
 
 
 class LatencyRecorder:
-    """Per-op latency samples + wall-window op counters.
+    """Per-op latency samples + wall-window op counters, backed by
+    :class:`repro.obs.Recorder` histograms.
 
     ``record`` during the measured window only — the driver runs its
     warmup reps against a recorder that is then :meth:`reset`, so
     jit compiles and the query engine's pow2 bucket-escalation retraces
-    (see ``repro.core.engine``) never land in a percentile.
+    (see ``repro.core.engine``) never land in a percentile. ``reset``
+    drops only the ``lat.`` histograms: a shared recorder's own
+    counters/spans (plan-cache traffic, commit stalls, ...) keep
+    accumulating across it, which is what trace export wants.
     """
 
-    def __init__(self, clock=time.perf_counter):
-        self._clock = clock
+    def __init__(self, clock=None, recorder: obs.Recorder | None = None):
+        if recorder is not None:
+            self._rec = recorder
+            self._clock = clock if clock is not None else recorder.clock
+        else:
+            self._clock = clock if clock is not None else time.perf_counter
+            # private sink: no timeline events, just the lat. histograms
+            self._rec = obs.Recorder(clock=self._clock, keep_events=False)
         self.reset()
 
+    @property
+    def recorder(self) -> obs.Recorder:
+        """The backing obs recorder (shared or private)."""
+        return self._rec
+
     def reset(self) -> None:
-        self._samples: dict[str, list[float]] = defaultdict(list)
+        self._rec.drop(LAT_PREFIX)
         self._counts: dict[str, int] = defaultdict(int)
         self._t0 = self._clock()
 
-    def record(self, op: str, seconds: float, units: int = 1) -> None:
+    def record(self, op: str, seconds: float, units: int = 1,
+               start: float | None = None) -> None:
         """One latency sample for ``op``; ``units`` feeds throughput
-        (e.g. points in an update batch, requests in a query flush)."""
-        self._samples[op].append(float(seconds))
+        (e.g. points in an update batch, requests in a query flush).
+        Pass ``start`` (the sample's begin time on this recorder's
+        clock) to also place the section on the exported timeline."""
+        self._rec.observe(LAT_PREFIX + op, float(seconds))
+        if start is not None:
+            self._rec.add_span(LAT_PREFIX + op, start, float(seconds),
+                               cat="latency", units=int(units))
         self._counts[op] += int(units)
 
     @contextlib.contextmanager
     def timer(self, op: str, units: int = 1):
         t0 = self._clock()
         yield
-        self.record(op, self._clock() - t0, units)
+        self.record(op, self._clock() - t0, units, start=t0)
 
     @property
     def wall_s(self) -> float:
@@ -71,10 +104,30 @@ class LatencyRecorder:
     def count(self, op: str) -> int:
         return self._counts[op]
 
+    def samples(self, op: str) -> list[float]:
+        """Retained raw samples (seconds) for ``op``."""
+        h = self._rec.hist(LAT_PREFIX + op)
+        return list(h.samples) if h is not None else []
+
     def latency_summary(self) -> dict[str, dict]:
         """{op: {p50_ms, p95_ms, p99_ms, mean_ms, min_ms, max_ms,
         count}} over the measured window."""
-        return {op: summarize(s) for op, s in sorted(self._samples.items())}
+        out = {}
+        for name in sorted(self._rec.hists):
+            if not name.startswith(LAT_PREFIX):
+                continue
+            h = self._rec.hists[name]
+            # exact per-sample reduction while retention holds (the
+            # driver's bounded windows), pow2-bucket fallback past it
+            if h.dropped:
+                s = h.summary(scale=1e3)
+                out[name[len(LAT_PREFIX):]] = {
+                    "count": s["count"], "mean_ms": s["mean"],
+                    "min_ms": s["min"], "max_ms": s["max"],
+                    **{f"p{p:g}_ms": s[f"p{p:g}"] for p in PERCENTILES}}
+            else:
+                out[name[len(LAT_PREFIX):]] = summarize(h.samples)
+        return out
 
     def throughput(self, ops) -> dict[str, float]:
         """Sustained units/s per op over the shared wall window (ops

@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import obs
 from ..core import make_index
 from ..core.index import SpatialIndex
 
@@ -174,20 +175,24 @@ class SpatialServer:
     def insert(self, pts, mask=None) -> int:
         """Dispatch a batch insert as version ``head+1``; returns the new
         version id without waiting for the device (dynamic backends)."""
-        pts = jnp.asarray(pts)
-        new = self.head_index.insert_unchecked(pts, mask)
-        self.stats["inserts"] += 1
-        self.stats["update_points"] += self._live_rows(pts, mask)
-        return self._publish(new, ("insert", pts, mask))
+        with obs.span("serving.insert") as sp:
+            pts = jnp.asarray(pts)
+            sp.set(rows=pts.shape[0], version=self._head + 1)
+            new = self.head_index.insert_unchecked(pts, mask)
+            self.stats["inserts"] += 1
+            self.stats["update_points"] += self._live_rows(pts, mask)
+            return self._publish(new, ("insert", pts, mask))
 
     def delete(self, pts, mask=None) -> int:
         """Dispatch a batch delete as version ``head+1`` (deletes never
         overflow, so this is async for dynamic backends as-is)."""
-        pts = jnp.asarray(pts)
-        new = self.head_index.delete(pts, mask)
-        self.stats["deletes"] += 1
-        self.stats["update_points"] += self._live_rows(pts, mask)
-        return self._publish(new, ("delete", pts, mask))
+        with obs.span("serving.delete") as sp:
+            pts = jnp.asarray(pts)
+            sp.set(rows=pts.shape[0], version=self._head + 1)
+            new = self.head_index.delete(pts, mask)
+            self.stats["deletes"] += 1
+            self.stats["update_points"] += self._live_rows(pts, mask)
+            return self._publish(new, ("delete", pts, mask))
 
     def _publish(self, index: SpatialIndex, op: tuple) -> int:
         self._head += 1
@@ -198,10 +203,12 @@ class SpatialServer:
             # backpressure: everything up to the evicted version must be
             # done before more updates pile on; its (now free) overflow
             # read doubles as an early deferred check
-            # contract: allow[host-sync-in-dispatch] window eviction is
-            # the designed backpressure point; waiting on the *evicted*
-            # version bounds device-queue depth without stalling head
-            jax.block_until_ready(old.tree)
+            with obs.span("serving.evict_block", version=v):
+                # contract: allow[host-sync-in-dispatch] window eviction
+                # is the designed backpressure point; waiting on the
+                # *evicted* version bounds device-queue depth without
+                # stalling head
+                jax.block_until_ready(old.tree)
             if bool(getattr(old.tree, "overflowed", False)):
                 self._recover()
             elif v > self._base:
@@ -216,31 +223,38 @@ class SpatialServer:
         """Barrier: wait for the head version, run the deferred overflow
         check (replaying from the last good version on overflow), and
         reclaim every older version. Returns the committed version id."""
-        head = self._versions[self._head]
-        jax.block_until_ready(head.tree)
-        if hasattr(head.tree, "overflowed") and \
-                bool(head.tree.overflowed):
-            head = self._recover()
-        if self._deferred_points:
-            # past the barrier these reads are free; see _live_rows
-            self.stats["update_points"] += sum(
-                int(x) for x in self._deferred_points)
-            self._deferred_points = []
-        self._base, self._base_index = self._head, head
-        self._log = []
-        self._versions = OrderedDict({self._head: head})
-        self.stats["commits"] += 1
-        return self._head
+        with obs.span("serving.commit") as sp:
+            sp.set(version=self._head, in_flight=self._head - self._base)
+            head = self._versions[self._head]
+            jax.block_until_ready(head.tree)
+            if hasattr(head.tree, "overflowed") and \
+                    bool(head.tree.overflowed):
+                head = self._recover()
+            if self._deferred_points:
+                # past the barrier these reads are free; see _live_rows
+                self.stats["update_points"] += sum(
+                    int(x) for x in self._deferred_points)
+                self._deferred_points = []
+            self._base, self._base_index = self._head, head
+            self._log = []
+            self._versions = OrderedDict({self._head: head})
+            self.stats["commits"] += 1
+            # commit is THE barrier: deferred obs device reads (span
+            # attachments, deferred counters) resolve here for free
+            obs.resolve()
+            return self._head
 
     def _recover(self) -> SpatialIndex:
         """Replay the op log from the last good version through the
         facade's synchronous recovery path (grow -> retry -> compact),
         making the head exact again after a deferred overflow."""
-        idx = self._base_index
-        for op, pts, mask in self._log:
-            idx = (idx.insert(pts, mask) if op == "insert"
-                   else idx.delete(pts, mask))
-        jax.block_until_ready(idx.tree)
+        with obs.span("serving.replay", ops=len(self._log),
+                      base=self._base, head=self._head):
+            idx = self._base_index
+            for op, pts, mask in self._log:
+                idx = (idx.insert(pts, mask) if op == "insert"
+                       else idx.delete(pts, mask))
+            jax.block_until_ready(idx.tree)
         self._versions = OrderedDict({self._head: idx})
         self._base, self._base_index = self._head, idx
         self._log = []

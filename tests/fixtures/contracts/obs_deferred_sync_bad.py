@@ -1,0 +1,16 @@
+# lint-as: src/repro/obs/record.py
+"""Violates obs-deferred-sync: instrumentation helpers read device
+values inline (a hidden sync on whatever path they instrument) instead
+of attaching them for the barrier drain."""
+import jax
+
+
+class Span:
+    def set_rows(self, value):
+        self.args["rows"] = float(jax.block_until_ready(value))
+        return self
+
+
+class Recorder:
+    def count_now(self, name, value):
+        self.counters[name] = self.counters.get(name, 0) + value.item()

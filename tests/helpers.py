@@ -1,0 +1,21 @@
+"""Shared helpers for the subprocess-based distributed tests.
+
+Those tests force 8 host devices (``--xla_force_host_platform_device_count``)
+in a child process; their wall time is dominated by 8-way shard_map
+compiles that parallelize across cores. The historical timeout budgets
+were tuned on ~4-core CI boxes and flake on 1-core ones, where the same
+work takes roughly 4x as long — so the budget scales with
+``os.cpu_count()`` instead of being a constant.
+"""
+
+from __future__ import annotations
+
+import os
+
+
+def scaled_timeout(base_s: float, devices: int = 8) -> float:
+    """Subprocess timeout: ``base_s`` (the >= devices/2-core budget)
+    stretched by the core deficit, so a 1-core box gets 4x the 4-core
+    budget rather than a flaky kill."""
+    cores = os.cpu_count() or 1
+    return base_s * max(1.0, devices / (2.0 * cores))

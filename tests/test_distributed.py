@@ -11,6 +11,8 @@ import sys
 
 import pytest
 
+from helpers import scaled_timeout
+
 pytestmark = pytest.mark.slow  # 8-device shard_map compile exceeds fast tier
 
 SCRIPT = r"""
@@ -70,6 +72,7 @@ print("DISTRIBUTED_OK")
 def test_distributed_index_lifecycle():
     out = subprocess.run(
         [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
-        timeout=560, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                          "HOME": "/root"})
+        timeout=scaled_timeout(560),
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root"})
     assert "DISTRIBUTED_OK" in out.stdout, out.stdout + out.stderr

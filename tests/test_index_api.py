@@ -13,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from helpers import scaled_timeout
 from repro.core import (BACKENDS, baselines, capacity_for, engine,
                         get_backend, make_index, porth, queries, spac)
 
@@ -235,8 +236,9 @@ def _run_distributed(script: str):
     import sys
     out = subprocess.run(
         [sys.executable, "-c", script], capture_output=True, text=True,
-        timeout=1200, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                           "HOME": "/root"})
+        timeout=scaled_timeout(1200),
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root"})
     assert "RECOVERY_OK" in out.stdout, out.stdout + out.stderr
 
 

@@ -1,0 +1,285 @@
+"""repro.obs: recorder semantics, counter parity with the engine's
+trace accounting, batcher coalesce/pad counters, deferred device-read
+resolution, exporter round-trips, and the disabled-mode overhead bound.
+
+The parity tests pin the tentpole claim: the obs counters are *the
+same events* the library already counts internally (engine traces,
+plan-cache misses, escalation rounds), not a parallel estimate — so a
+trace-count assertion and an obs-counter assertion can never drift.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import engine, make_index
+from repro.obs import view
+from repro.serving import LatencyRecorder, MicroBatcher, SpatialServer
+
+
+@pytest.fixture(autouse=True)
+def _obs_disabled():
+    """Every test starts and ends with no recorder installed."""
+    obs.uninstall()
+    yield
+    obs.uninstall()
+
+
+def _pts(n, dim=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.uniform(0.0, 100.0, size=(n, dim)).astype(np.float32)
+
+
+# -- recorder core ----------------------------------------------------------
+
+def test_pow2_bucket():
+    assert obs.pow2_bucket(0) == 0.0
+    assert obs.pow2_bucket(-3.0) == 0.0
+    assert obs.pow2_bucket(1.0) == 1.0
+    assert obs.pow2_bucket(3.0) == 4.0
+    assert obs.pow2_bucket(4.0) == 4.0
+    assert obs.pow2_bucket(0.75) == 1.0
+
+
+def test_hist_summary_exact_until_retention():
+    h = obs.Hist(max_samples=4)
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    s = h.summary()
+    assert s["count"] == 4 and s["min"] == 1.0 and s["max"] == 4.0
+    assert s["p50"] == 2.0 and s["p99"] == 4.0
+    h.observe(100.0)                      # past retention: bucket edges
+    assert h.dropped == 1
+    assert h.summary()["count"] == 5
+    assert h.summary()["max"] == 100.0
+
+
+def test_span_timing_uses_recorder_clock():
+    now = [0.0]
+    rec = obs.Recorder(clock=lambda: now[0])
+    with rec.span("step", cat="test", kind="unit") as sp:
+        now[0] = 1.5
+        sp.set(rows=7)
+    (ev,) = rec.events
+    assert ev["name"] == "step" and ev["cat"] == "test"
+    assert ev["ts"] == 0.0 and ev["dur"] == 1.5
+    assert ev["args"] == {"kind": "unit", "rows": 7}
+    rec.add_span("ext", 2.0, 0.5)
+    assert rec.events[-1] == {"name": "ext", "ts": 2.0, "dur": 0.5}
+
+
+def test_module_helpers_route_to_installed_recorder():
+    rec = obs.Recorder()
+    with obs.recording(rec) as r:
+        assert r is rec and obs.enabled() and obs.recorder() is rec
+        obs.count("c")
+        obs.count("c", 2)
+        obs.gauge("g", 5)
+        obs.gauge("g", 3)
+        obs.observe("h", 8.0)
+    assert not obs.enabled()
+    assert rec.counters["c"] == 3
+    assert rec.gauges["g"] == {"value": 3, "max": 5, "n": 2}
+    assert rec.hist("h").count == 1
+
+
+# -- deferred device reads --------------------------------------------------
+
+def test_deferred_values_resolve_only_at_barrier():
+    rec = obs.Recorder()
+    with obs.recording(rec):
+        total = jnp.asarray([1, 2, 3]).sum()     # in-flight device value
+        with obs.span("work") as sp:
+            sp.defer("total", total)
+        obs.defer("points", jnp.asarray(5))
+        assert rec.pending == 2
+        # the span already ended; its deferred slot is a placeholder
+        assert rec.events[-1]["args"]["total"] is None
+        assert obs.resolve() == 2
+        assert rec.pending == 0
+    assert rec.events[-1]["args"]["total"] == 6.0
+    assert "total_resolved_s" in rec.events[-1]["args"]
+    assert rec.counters["points"] == 5.0
+
+
+def test_server_commit_is_the_obs_barrier():
+    pts = _pts(256)
+    with obs.recording() as rec:
+        srv = SpatialServer.build("porth", pts, capacity_points=1024)
+        with obs.span("ingest") as sp:
+            srv.insert(_pts(32, seed=1))
+            sp.defer("live", jnp.asarray(288))
+        assert rec.pending == 1
+        srv.commit()                     # commit drains deferred reads
+        assert rec.pending == 0
+    names = [ev["name"] for ev in rec.events]
+    assert "serving.insert" in names and "serving.commit" in names
+
+
+# -- parity with the library's own accounting -------------------------------
+
+def test_engine_trace_counter_parity():
+    """obs ``engine.trace`` increments next to ``_STATS["traces"]``
+    inside the jitted closures, so over any recording window the obs
+    delta equals the ``engine.trace_count()`` delta exactly."""
+    pts = _pts(300, seed=2)
+    with obs.recording() as rec:
+        idx = make_index("porth", pts)
+        t0 = engine.trace_count()
+        c0 = rec.counters.get("engine.trace", 0)
+        q = _pts(13, seed=3)             # 13 rows: a fresh plan signature
+        d2a, _ = idx.knn(q, 3)
+        d2b, _ = idx.knn(q, 3)           # cached plan: no new trace
+        t_delta = engine.trace_count() - t0
+        o_delta = rec.counters.get("engine.trace", 0) - c0
+    assert t_delta >= 1
+    assert o_delta == t_delta
+    assert rec.counters["engine.plan_request"] >= 2
+    assert rec.counters.get("engine.plan_miss", 0) >= 1
+    assert sum(v for k, v in rec.counters.items()
+               if k.startswith("engine.route.")) \
+        == rec.counters["engine.plan_request"]
+    np.testing.assert_array_equal(np.asarray(d2a), np.asarray(d2b))
+
+
+def test_escalation_counter_matches_rounds_histogram():
+    """``engine.escalation`` (one per extra round) must equal the sum
+    of the per-call ``engine.escalation_rounds`` observations."""
+    pts = _pts(2048, seed=4)
+    with obs.recording() as rec:
+        idx = make_index("porth", pts)
+        lo = np.zeros((4, 2), dtype=np.float32)
+        hi = np.full((4, 2), 100.0, dtype=np.float32)  # whole domain
+        cnt = idx.range_count(lo, hi)
+        idx.range_count(lo, hi)          # converged bucket: 0 rounds
+    assert int(np.asarray(cnt)[0]) == 2048
+    h = rec.hist("engine.escalation_rounds")
+    assert h is not None and h.count == 2
+    assert rec.counters.get("engine.escalation", 0) == int(h.total)
+
+
+# -- batcher counters -------------------------------------------------------
+
+def test_batcher_coalesce_pad_and_flush_reasons():
+    pts = _pts(256, seed=5)
+    idx = make_index("porth", pts)
+    with obs.recording() as rec:
+        mb = MicroBatcher(idx, max_batch=1024, max_delay_s=10.0)
+        tickets = [mb.submit_knn(_pts(1, seed=10 + i)[0], 3)
+                   for i in range(5)]
+        assert rec.gauges["batcher.queue_depth"]["value"] == 5
+        mb.flush()
+        [t.result() for t in tickets]
+        assert rec.counters["batcher.flush.explicit"] == 1
+        assert rec.counters["batcher.requests"] == 5
+        assert rec.hist("batcher.coalesce_rows").samples == [5.0]
+        # pow2 padding: 5 rows pad to 8, so 3 wasted rows
+        assert rec.hist("batcher.pad_rows").samples == [3.0]
+        assert rec.hist("batcher.wait_s").count == 5
+        # result-forced flush
+        t = mb.submit_knn(_pts(1, seed=20)[0], 3)
+        t.result()
+        assert rec.counters["batcher.flush.result"] == 1
+        # size-forced flush
+        mb.max_batch = 2
+        mb.submit_knn(_pts(2, seed=21), 3).result()
+        assert rec.counters["batcher.flush.size"] == 1
+
+
+# -- LatencyRecorder on obs histograms --------------------------------------
+
+def test_latency_recorder_is_backed_by_obs_hists():
+    rec = obs.Recorder()
+    lr = LatencyRecorder(recorder=rec)
+    lr.record("knn", 0.004, 16, start=rec.clock())
+    lr.record("knn", 0.002, 16)
+    assert rec.hist("lat.knn").count == 2
+    s = lr.latency_summary()["knn"]
+    assert s["count"] == 2
+    assert s["min_ms"] == pytest.approx(2.0)
+    assert s["max_ms"] == pytest.approx(4.0)
+    assert lr.count("knn") == 32
+    assert rec.events[-1]["name"] == "lat.knn"   # timeline span via start=
+    lr.reset()                                   # drops lat.* hists only
+    assert lr.latency_summary() == {}
+    assert rec.events, "reset must not erase the timeline"
+
+
+def test_latency_recorder_private_when_no_recorder():
+    lr = LatencyRecorder()
+    with lr.timer("op"):
+        pass
+    assert lr.latency_summary()["op"]["count"] == 1
+    assert not obs.enabled()
+
+
+# -- exporters and the view CLI ---------------------------------------------
+
+def test_exporters_roundtrip_and_view_cli(tmp_path, capsys):
+    rec = obs.Recorder()
+    with obs.recording(rec):
+        with obs.span("a", cat="x", n=1):
+            pass
+        obs.count("c", 2)
+        obs.gauge("g", 3)
+        obs.observe("h", 4.0)
+    chrome = tmp_path / "trace.json"
+    lines = tmp_path / "trace.jsonl"
+    obs.write_chrome_trace(rec, str(chrome))
+    obs.write_jsonl(rec, str(lines))
+
+    data = json.loads(chrome.read_text())
+    (ev,) = [e for e in data["traceEvents"] if e["ph"] == "X"]
+    assert ev["name"] == "a" and ev["dur"] >= 0      # microseconds
+    assert data["otherData"]["counters"]["c"] == 2
+    recs = [json.loads(ln) for ln in lines.read_text().splitlines()]
+    assert recs[0]["type"] == "meta"
+    kinds = {r["type"] for r in recs}
+    assert {"span", "counter", "gauge", "hist"} <= kinds
+
+    for path in (chrome, lines):
+        assert view.main([str(path)]) == 0
+        out = capsys.readouterr().out
+        assert "a" in out and "c" in out
+    assert view.main([str(tmp_path / "missing.json")]) == 1
+    bad = tmp_path / "bad.json"
+    bad.write_text('{"nope": 1}')
+    assert view.main([str(bad)]) == 1
+    capsys.readouterr()
+
+
+# -- disabled mode ----------------------------------------------------------
+
+def test_disabled_mode_is_near_free():
+    assert not obs.enabled()
+    assert obs.span("x") is obs.NULL_SPAN
+    with obs.span("x", a=1) as sp:
+        assert sp is obs.NULL_SPAN
+        assert sp.set(a=2) is sp
+        assert sp.defer("k", object()) is sp
+        assert sp.done
+    assert obs.resolve() == 0
+    # each disabled helper is one dict-slot check; even a slow 1-core
+    # CI box does 300k of them in well under the bound
+    t0 = time.perf_counter()
+    for _ in range(100_000):
+        obs.count("c")
+        obs.observe("h", 1.0)
+        obs.gauge("g", 1)
+    assert time.perf_counter() - t0 < 2.0
+
+
+def test_disabled_mode_records_nothing():
+    pts = _pts(128, seed=6)
+    idx = make_index("porth", pts)
+    idx.knn(_pts(4, seed=7), 3)          # instrumented paths, obs off
+    rec = obs.Recorder()
+    with obs.recording(rec):
+        pass
+    assert not rec.counters and not rec.events

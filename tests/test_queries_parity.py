@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from helpers import scaled_timeout
 from repro.core import BACKENDS, engine, make_index, queries
 
 PHI = 8
@@ -330,7 +331,7 @@ print("DIST_ENGINE_OK")
 def test_distributed_engine_queries():
     out = subprocess.run(
         [sys.executable, "-c", _DIST_SCRIPT], capture_output=True,
-        text=True, timeout=900,
+        text=True, timeout=scaled_timeout(900),
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
              "HOME": "/root"})
     assert "DIST_ENGINE_OK" in out.stdout, out.stdout + out.stderr
