@@ -79,7 +79,12 @@ def spatial_sweep(kinds=SPATIAL_KINDS, n: int = 20_000, nq: int = 256,
     ins = common.points_for(dist, batch, seed=3)
     models = kernel_models(n, nq, k, dim, batch)
     results: dict = {}
-    with obs.recording() as rec_obs:
+    # capture_costs: each new query/update plan is AOT-compiled once
+    # (during common.timed's warmup call) and its while-loop-aware HLO
+    # flops/bytes land as plan.cost.* counters, so every cell can carry
+    # compiled-plan cost next to the analytic model (achieved-vs-model
+    # per plan, not just per formula)
+    with obs.recording(obs.Recorder(capture_costs=True)) as rec_obs:
         for kind in kinds:
             idx = common.build_index(kind, pts, phi=phi,
                                      capacity_points=n + batch)
@@ -89,8 +94,11 @@ def spatial_sweep(kinds=SPATIAL_KINDS, n: int = 20_000, nq: int = 256,
                                                     lo, hi),
                 "insert": lambda: common.timed(idx.insert, ins),
             }
+            sig_prefix = {"knn": "knn.", "range_count": "range_count.",
+                          "insert": f"update.{kind}.insert."}
             row: dict = {}
             for kern, run_timed in timers.items():
+                seen = set(obs.costs.plan_costs(rec_obs.counters))
                 t, _ = run_timed()
                 flops, byts = models[kern]
                 cell = {
@@ -101,6 +109,25 @@ def spatial_sweep(kinds=SPATIAL_KINDS, n: int = 20_000, nq: int = 256,
                     "achieved_gbytes_s": byts / t / 1e9,
                     "intensity_flop_per_byte": flops / byts,
                 }
+                # compiled-plan cost captured by this kernel's calls;
+                # escalation can compile several plans — the max-bytes
+                # one is the converged plan that dominates steady state
+                captured = {
+                    s: c for s, c in
+                    obs.costs.plan_costs(rec_obs.counters).items()
+                    if s not in seen and s.startswith(sig_prefix[kern])}
+                if captured:
+                    top = max(captured,
+                              key=lambda s: captured[s].get("bytes", 0))
+                    hlo_bytes = captured[top].get("bytes", 0)
+                    cell["plan_sig"] = top
+                    cell["plan_hlo_bytes"] = hlo_bytes
+                    cell["plan_xla_flops"] = captured[top].get(
+                        "xla_flops", 0)
+                    # >1: XLA's compiled program moves more bytes than
+                    # the useful-work minimum — the structure's price
+                    cell["hlo_vs_model_bytes"] = \
+                        hlo_bytes / byts if byts else 0.0
                 row[kern] = cell
                 base = f"roofline.{kind}.{kern}"
                 obs.count(f"{base}.model_flops", flops)

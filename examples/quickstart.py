@@ -85,3 +85,14 @@ print(f"wrote {trace_path} — inspect with: "
 # automatic capacity, snapshot-safe serving) are machine-checked; run
 #   PYTHONPATH=src python -m repro.analysis.lint src benchmarks examples
 # (or `repro-lint` once installed) — see ROADMAP.md "Contracts"
+
+# ------------------------------------------- memory + perf drift
+# Index memory is nbytes metadata — shape/dtype arithmetic, no device
+# sync — so it is free to print even on dispatch paths.
+print(f"index holds {obs.fmt_bytes(idx.nbytes)} across "
+      f"{len(idx):,} live points")
+# Perf drift vs the committed baseline (results/regress_smoke.json):
+#   PYTHONPATH=src python -m repro.obs.regress           # local bands
+#   PYTHONPATH=src python -m repro.obs.regress --ci      # CI bands
+# (or `repro-regress`); --update rewrites the baseline after an
+# intentional perf change, and each run appends results/bench/BENCH_n

@@ -461,7 +461,14 @@ class ObsDeferredSync(Rule):
     which callers invoke at an existing barrier. A stray
     ``block_until_ready`` / ``.item()`` / ``device_get`` / host
     ``asarray`` anywhere else in the package would silently reintroduce
-    the sync the subsystem exists to avoid."""
+    the sync the subsystem exists to avoid.
+
+    Phase 2 extends the same promise to the accounting modules:
+    ``obs/memory.py`` works from ``nbytes`` metadata (pure shape/dtype
+    arithmetic) and ``obs/costs.py`` from AOT ``lower().compile()``
+    artifacts — neither may call ``memory_stats()`` (a runtime query of
+    the device allocator), which is sanctioned only inside
+    ``Recorder.resolve``."""
 
     name = "obs-deferred-sync"
     description = ("repro.obs reads device values only inside "
@@ -505,6 +512,12 @@ class ObsDeferredSync(Rule):
             yield self.diag(
                 mod, node, "device_get outside Recorder.resolve; defer "
                 "the read to the barrier drain")
+        elif callee == "memory_stats":
+            yield self.diag(
+                mod, node, "memory_stats() outside Recorder.resolve "
+                "queries the device allocator mid-dispatch; memory "
+                "accounting uses nbytes metadata (repro.obs.memory), "
+                "allocator snapshots belong in the barrier drain")
         elif mod.resolve(node.func) == "numpy.asarray":
             yield self.diag(
                 mod, node, "np.asarray outside Recorder.resolve pulls "

@@ -201,6 +201,15 @@ class QueryEngine:
         obs.count(f"engine.route.{route}")
         fn = _knn_closure(qpts.shape[0], dim, str(qpts.dtype), int(k),
                           route, param)
+        # opt-in compile-cost attribution (repro.obs.costs): charge this
+        # plan's flops/bytes once per signature at the site that owns
+        # the plan_miss counter; no-op on the default recorder. The view
+        # shape is part of the signature — the compiled program (and so
+        # its cost) depends on R x C, not just the closure-cache key.
+        obs.costs.capture(
+            fn, (view, qpts),
+            f"knn.q{qpts.shape[0]}.k{int(k)}.{route}-{param}"
+            f".v{rows}x{cols}")
         return fn(view, qpts)
 
     def range_count(self, view: queries.LeafView, lo, hi):
@@ -215,6 +224,10 @@ class QueryEngine:
         while True:
             fn = _range_count_closure(lo.shape[0], lo.shape[-1],
                                       str(lo.dtype), max_rows)
+            obs.costs.capture(
+                fn, (view, lo, hi),
+                f"range_count.q{lo.shape[0]}.r{max_rows}"
+                f".v{rows}x{view.pts.shape[1]}")
             cnt, trunc = fn(view, lo, hi)
             if max_rows >= rows or not bool(jnp.any(trunc)):
                 self._buckets[key] = max_rows
@@ -245,6 +258,10 @@ class QueryEngine:
         while True:
             fn = _range_list_closure(lo.shape[0], lo.shape[-1],
                                      str(lo.dtype), max_rows, cap)
+            obs.costs.capture(
+                fn, (view, lo, hi),
+                f"range_list.q{lo.shape[0]}.r{max_rows}.c{cap}"
+                f".v{rows}x{cols}")
             ids, cnt, rows_trunc = fn(view, lo, hi)
             need_rows = max_rows < rows and bool(jnp.any(rows_trunc))
             max_cnt = int(jnp.max(cnt)) if cnt.size else 0

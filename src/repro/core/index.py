@@ -354,6 +354,13 @@ class SpatialIndex:
         fn = _update_closure(self.kind, op, pts.shape[0], pts.shape[1],
                              str(pts.dtype), self._static_kwargs(op, extra),
                              donate)
+        # compile-cost attribution (no-op unless a capture_costs recorder
+        # is installed): charge this update plan's flops/bytes once per
+        # signature, next to the update_plan_miss it corresponds to
+        obs.costs.capture(
+            fn, (tree, pts, mask),
+            f"update.{self.kind}.{op}.m{pts.shape[0]}.d{pts.shape[1]}"
+            f".r{tree.pts.shape[0]}")
         return fn(tree, pts, mask)
 
     # -- introspection -----------------------------------------------------
@@ -381,6 +388,13 @@ class SpatialIndex:
     def size(self):
         """Live point count (device scalar; ``int()`` it to sync)."""
         return self._tree.size
+
+    @property
+    def nbytes(self) -> int:
+        """Resident bytes of the backend tree's buffers — pure
+        shape/dtype arithmetic (``repro.obs.memory.tree_bytes``), never
+        a device read, so safe on dispatch paths."""
+        return obs.tree_bytes(self._tree)
 
     def __len__(self) -> int:
         return int(self.size)
@@ -694,6 +708,12 @@ class DistributedIndex:
         """Points lost to routing-slab overflow (0 = exact; re-shard with a
         larger ``slack`` if nonzero)."""
         return self._index.dropped
+
+    @property
+    def nbytes(self) -> int:
+        """Resident bytes across all shards (metadata arithmetic —
+        global arrays report their full logical footprint)."""
+        return obs.tree_bytes(self._index)
 
     def insert(self, pts, mask=None) -> "DistributedIndex":
         """Batch insert. Two shard-level failure modes are recovered

@@ -50,15 +50,30 @@ Instrumented out of the box (counter/span names are stable API):
 ``batcher.wait_s``                    request queue wait (submit->flush)
 ``batcher.flush.<reason>``            size|deadline|result|retarget|
                                       explicit
+``server.mem.live_bytes``             head-version buffer bytes (gauge)
+``server.mem.window_bytes``           retained-window bytes (gauge)
+``server.mem.evicted_bytes``          bytes freed by window eviction
+``plan.cost.<sig>.flops|bytes``       captured per-plan cost model
+                                      (``Recorder(capture_costs=True)``)
+``backend.mem.d<id>.bytes_in_use``    allocator stats, resolve()-only
+                                      (``memory_snapshots=True``)
 ====================================  =================================
+
+Phase 2 adds three memory/cost/drift surfaces (ROADMAP "Observability"):
+:mod:`repro.obs.memory` (``nbytes``-metadata accounting — sync-free by
+construction), :mod:`repro.obs.costs` (AOT compile-cost capture at
+plan-miss sites), and ``python -m repro.obs.regress`` (the perf gate
+comparing a fresh smoke run against committed baselines).
 """
 
 from __future__ import annotations
 
 import contextlib
 
+from . import costs
 from .export import (chrome_trace, jsonl_records, write_chrome_trace,
                      write_jsonl)
+from .memory import fmt_bytes, tree_bytes
 from .record import NULL_SPAN, Hist, NullSpan, Recorder, Span, pow2_bucket
 
 __all__ = [
@@ -66,6 +81,7 @@ __all__ = [
     "install", "uninstall", "recording", "enabled", "recorder",
     "span", "count", "gauge", "observe", "defer", "resolve",
     "chrome_trace", "jsonl_records", "write_chrome_trace", "write_jsonl",
+    "costs", "tree_bytes", "fmt_bytes",
 ]
 
 # single mutable slot so the disabled-path check is one dict lookup

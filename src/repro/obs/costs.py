@@ -1,0 +1,125 @@
+"""Compile-cost attribution: per-plan flops/bytes as ``plan.cost.*``
+counters, captured once at each plan-miss site.
+
+The engine and the index facade already count plan compiles
+(``engine.plan_miss`` / ``index.update_plan_miss``); this module turns
+those misses into *attributed* cost. When the installed recorder was
+built with ``capture_costs=True``, :func:`capture` AOT-compiles the
+jitted closure once per plan signature (``fn.lower(*args).compile()``)
+and records:
+
+    plan.cost.<sig>.flops     — while-loop-aware HLO flop count
+    plan.cost.<sig>.bytes     — fusion-boundary traffic model
+    plan.cost.<sig>.xla_flops — XLA's own cost_analysis() (body-once
+                                for loops; kept for cross-checking)
+    plan.cost.captured        — number of plans captured
+
+Flop/byte walking reuses :mod:`repro.launch.hlo_analysis` — XLA's
+``cost_analysis()`` counts a while body ONCE, which under-reports the
+frontier kNN's chunk loop by the trip count; ``analyze_text`` fixes
+that, so roofline/attribution views get honest per-plan cost models.
+
+Costs are static per compiled plan, so consumers split observed
+device-wait into "expected from cost model" vs measured (driver
+``--attributed``) and roofline gets achieved-vs-model per plan without
+re-deriving analytic formulas.
+
+Contracts: everything here is host-side compile machinery — no
+``device_get`` / ``.item()`` / ``memory_stats`` (the extended
+``obs-deferred-sync`` rule bans them outside ``Recorder.resolve``).
+Capture is NOT free: the AOT lowering re-traces the closure (one extra
+``engine.trace`` per captured plan) and compiles a second executable,
+which is why it is opt-in and excluded from overhead-sensitive runs —
+the default ``Recorder()`` never captures.
+
+Signatures are shape-keyed like the plan caches (op, query rows, k /
+caps, route), NOT backend-keyed: two backends whose views share a
+shape share one captured cost entry.
+"""
+
+from __future__ import annotations
+
+__all__ = ["capture", "enabled", "plan_costs", "PREFIX"]
+
+PREFIX = "plan.cost."
+
+
+def _recorder():
+    # function-level import: this module loads during package init
+    from . import recorder
+    return recorder()
+
+
+def enabled() -> bool:
+    """True iff a recorder with ``capture_costs=True`` is installed."""
+    rec = _recorder()
+    return rec is not None and getattr(rec, "capture_costs", False)
+
+
+def capture(fn, args, sig: str) -> bool:
+    """Record ``plan.cost.<sig>.*`` counters for jitted closure ``fn``
+    called with ``args`` — once per signature per recorder.
+
+    Near-free unless a ``capture_costs`` recorder is installed; then
+    the first call per ``sig`` pays one AOT lower+compile (equivalent
+    to the plan-miss compile already charged at this site). Returns
+    True iff a capture happened.
+    """
+    rec = _recorder()
+    if rec is None or not getattr(rec, "capture_costs", False):
+        return False
+    with rec._lock:
+        if sig in rec._cost_sigs:
+            return False
+        rec._cost_sigs.add(sig)
+    try:
+        compiled = fn.lower(*args).compile()
+    except Exception:                       # pragma: no cover - backend quirk
+        rec.count(f"{PREFIX}capture_failed")
+        return False
+    hlo = _analyze(compiled)
+    rec.count(f"{PREFIX}{sig}.flops", hlo.get("flops", 0))
+    rec.count(f"{PREFIX}{sig}.bytes", hlo.get("bytes", 0))
+    xla_flops = _xla_flops(compiled)
+    if xla_flops is not None:
+        rec.count(f"{PREFIX}{sig}.xla_flops", xla_flops)
+    rec.count(f"{PREFIX}captured")
+    return True
+
+
+def _analyze(compiled) -> dict:
+    """While-loop-aware flops/bytes from the compiled module's HLO."""
+    from ..launch.hlo_analysis import analyze_text
+    try:
+        return analyze_text(compiled.as_text())
+    except Exception:                       # pragma: no cover - parse drift
+        return {}
+
+
+def _xla_flops(compiled):
+    """XLA's own flop estimate (body-once for loops); None if absent."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:                       # pragma: no cover - backend quirk
+        return None
+    if isinstance(ca, (list, tuple)):       # some backends wrap per-device
+        ca = ca[0] if ca else {}
+    if not isinstance(ca, dict):
+        return None
+    flops = ca.get("flops")
+    return float(flops) if flops is not None else None
+
+
+def plan_costs(counters: dict) -> dict:
+    """Group ``plan.cost.<sig>.<metric>`` counters back into
+    ``{sig: {metric: value}}`` (report/post-processing helper)."""
+    out: dict[str, dict] = {}
+    for name, value in counters.items():
+        if not name.startswith(PREFIX):
+            continue
+        rest = name[len(PREFIX):]
+        sig, sep, metric = rest.rpartition(".")
+        if not sep or metric not in ("flops", "bytes", "xla_flops"):
+            continue
+        out.setdefault(sig, {})[metric] = value
+    return out

@@ -1,0 +1,59 @@
+"""Live-buffer memory accounting from array metadata — no device reads.
+
+Every tree backend is a registered-dataclass pytree of device arrays,
+so its resident footprint is the sum of leaf ``nbytes`` — a pure
+shape/dtype computation (``prod(shape) * dtype.itemsize``) that never
+touches the device or blocks on an in-flight value. That makes these
+helpers safe on dispatch paths: the serving contracts
+(``host-sync-in-dispatch``, ``obs-deferred-sync``) hold with no new
+pragmas.
+
+Consumers:
+
+* ``SpatialIndex.nbytes`` / ``DistributedIndex.nbytes`` wrap
+  :func:`tree_bytes` for one index.
+* ``SpatialServer`` tracks bytes per retained version and emits
+  ``server.mem.live_bytes`` / ``server.mem.window_bytes`` gauges plus
+  eviction-delta counters through :mod:`repro.obs` (no-ops while obs is
+  disabled).
+* The workload driver's per-scenario report gains a memory section
+  (steady/peak window bytes, eviction traffic).
+
+Backend allocator truth (``device.memory_stats()``) is deliberately NOT
+here: that is a device-runtime call, taken only inside
+``Recorder.resolve`` when ``memory_snapshots`` is set — the extended
+``obs-deferred-sync`` lint rule bans it anywhere else in this package.
+"""
+
+from __future__ import annotations
+
+__all__ = ["tree_bytes", "fmt_bytes"]
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of all array leaves in ``tree``.
+
+    Metadata arithmetic only: ``jax.Array.nbytes`` comes from the aval
+    (shape x itemsize), so this neither reads device memory nor blocks
+    on an in-flight computation. Non-array leaves (ints, floats,
+    static config) contribute 0.
+    """
+    # deferred import: repro.obs stays importable without jax installed
+    from jax.tree_util import tree_leaves
+
+    total = 0
+    for leaf in tree_leaves(tree):
+        nb = getattr(leaf, "nbytes", None)
+        if nb is not None:
+            total += int(nb)
+    return total
+
+
+def fmt_bytes(n: float) -> str:
+    """Human-readable byte count (binary units, one decimal)."""
+    n = float(n)
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0 or unit == "TiB":
+            return f"{n:,.1f} {unit}" if unit != "B" else f"{int(n)} B"
+        n /= 1024.0
+    return f"{n:,.1f} TiB"

@@ -33,6 +33,7 @@ driver's.
 from __future__ import annotations
 
 import math
+import threading
 import time
 
 
@@ -154,7 +155,8 @@ class Span:
         # placeholder keeps args non-empty so _finish retains the dict
         # (resolve() mutates it in place after the span has ended)
         self.args[key] = None
-        self.rec._pending.append((self.args, key, value))
+        with self.rec._lock:
+            self.rec._pending.append((self.args, key, value))
         return self
 
     @property
@@ -199,18 +201,39 @@ class Recorder:
     Host-side only: ``clock`` is a monotonic timer (``perf_counter``),
     events are plain dicts, and the only device interaction is the
     deferred-read list drained by :meth:`resolve` at a barrier.
+
+    Thread-safe: the batcher's worker threads and the main thread mutate
+    counters/hists concurrently, so every read-modify-write goes through
+    one uncontended lock (the disabled path in :mod:`repro.obs` never
+    reaches it).
+
+    Opt-in extras (both default off, both drained at barriers only):
+
+    * ``memory_snapshots`` — each :meth:`resolve` also records backend
+      allocator gauges (``backend.mem.d<id>.*``) from
+      ``device.memory_stats()``; that call is a device-runtime read, so
+      it is allowed *only* lexically inside ``resolve`` (lint rule
+      ``obs-deferred-sync``).
+    * ``capture_costs`` — :mod:`repro.obs.costs` AOT-compiles each new
+      query/update plan once and records ``plan.cost.*`` counters;
+      ``_cost_sigs`` tracks which plan signatures were already captured.
     """
 
     def __init__(self, clock=time.perf_counter, max_samples: int = 8192,
-                 keep_events: bool = True):
+                 keep_events: bool = True, capture_costs: bool = False,
+                 memory_snapshots: bool = False):
         self.clock = clock
         self.keep_events = keep_events
         self.max_samples = max_samples
+        self.capture_costs = capture_costs
+        self.memory_snapshots = memory_snapshots
         self.events: list[dict] = []       # completed spans, in order
         self.counters: dict[str, float] = {}
         self.gauges: dict[str, dict] = {}  # name -> {value, max, n}
         self.hists: dict[str, Hist] = {}
         self._pending: list[tuple[dict | str, str | None, object]] = []
+        self._cost_sigs: set[str] = set()  # plan sigs already captured
+        self._lock = threading.Lock()
         self.t0 = self.clock()
 
     # -- spans -------------------------------------------------------------
@@ -226,7 +249,8 @@ class Recorder:
                 ev["cat"] = span.cat
             if span.args:
                 ev["args"] = span.args
-            self.events.append(ev)
+            with self._lock:
+                self.events.append(ev)
 
     def add_span(self, name: str, start_s: float, dur_s: float,
                  cat: str = "", **attrs) -> None:
@@ -238,28 +262,32 @@ class Recorder:
                 ev["cat"] = cat
             if attrs:
                 ev["args"] = attrs
-            self.events.append(ev)
+            with self._lock:
+                self.events.append(ev)
 
     # -- metrics -----------------------------------------------------------
 
     def count(self, name: str, n: float = 1) -> None:
-        self.counters[name] = self.counters.get(name, 0) + n
+        with self._lock:
+            self.counters[name] = self.counters.get(name, 0) + n
 
     def gauge(self, name: str, value) -> None:
-        g = self.gauges.get(name)
-        if g is None:
-            self.gauges[name] = {"value": value, "max": value, "n": 1}
-        else:
-            g["value"] = value
-            if value > g["max"]:
-                g["max"] = value
-            g["n"] += 1
+        with self._lock:
+            g = self.gauges.get(name)
+            if g is None:
+                self.gauges[name] = {"value": value, "max": value, "n": 1}
+            else:
+                g["value"] = value
+                if value > g["max"]:
+                    g["max"] = value
+                g["n"] += 1
 
     def observe(self, name: str, value) -> None:
-        h = self.hists.get(name)
-        if h is None:
-            h = self.hists[name] = Hist(self.max_samples)
-        h.observe(value)
+        with self._lock:
+            h = self.hists.get(name)
+            if h is None:
+                h = self.hists[name] = Hist(self.max_samples)
+            h.observe(value)
 
     def hist(self, name: str) -> Hist | None:
         return self.hists.get(name)
@@ -267,15 +295,17 @@ class Recorder:
     def drop(self, prefix: str) -> None:
         """Forget histograms under a name prefix (e.g. a latency
         recorder resetting its measured window after warmup)."""
-        for name in [n for n in self.hists if n.startswith(prefix)]:
-            del self.hists[name]
+        with self._lock:
+            for name in [n for n in self.hists if n.startswith(prefix)]:
+                del self.hists[name]
 
     # -- deferred device reads (resolve at barriers only) ------------------
 
     def add_deferred(self, name: str, value) -> None:
         """Attach an in-flight device scalar to counter ``name``; it is
         folded in (via one host read) at the next ``resolve()``."""
-        self._pending.append((name, None, value))
+        with self._lock:
+            self._pending.append((name, None, value))
 
     @property
     def pending(self) -> int:
@@ -286,11 +316,35 @@ class Recorder:
         """THE sync point: drain the deferred list with one blocking
         host read per entry. Call only from an existing barrier
         (``commit()``, report time) — everywhere else obs must stay
-        sync-free (lint rule ``obs-deferred-sync``)."""
-        if not self._pending:
+        sync-free (lint rule ``obs-deferred-sync``).
+
+        With ``memory_snapshots`` on, also records backend allocator
+        gauges here — ``device.memory_stats()`` is a device-runtime
+        read, so this is the only place in the package allowed to call
+        it (the extended ``obs-deferred-sync`` rule checks that
+        lexically)."""
+        with self._lock:
+            pending, self._pending = self._pending, []
+        if self.memory_snapshots:
+            import jax  # deferred import: obs stays stdlib-importable
+            for dev in jax.local_devices():
+                try:
+                    stats = dev.memory_stats()
+                except Exception:      # backend without allocator stats
+                    stats = None
+                if not stats:          # CPU devices report None
+                    continue
+                used = stats.get("bytes_in_use")
+                if used is not None:
+                    self.gauge(f"backend.mem.d{dev.id}.bytes_in_use",
+                               int(used))
+                peak = stats.get("peak_bytes_in_use")
+                if peak is not None:
+                    self.gauge(f"backend.mem.d{dev.id}.peak_bytes",
+                               int(peak))
+        if not pending:
             return 0
         import jax  # deferred import: obs stays importable stdlib-only
-        pending, self._pending = self._pending, []
         for target, key, value in pending:
             value = jax.block_until_ready(value)
             now = self.clock() - self.t0

@@ -6,10 +6,15 @@ counters, gauges and histogram summaries. Exit status 0 iff the file
 parses as an obs trace; CI uses that as the "exported trace is
 well-formed" check.
 
+``--by-name`` collapses the raw timeline events to one row per span
+name (count / total / mean, sorted by total) — the flat event dump of
+a long driver trace is unreadable, the aggregation is what you scan
+first. ``--top N`` limits both it and the default span table.
+
 Run::
 
     PYTHONPATH=src python -m repro.obs.view results/serve_trace.json
-    PYTHONPATH=src python -m repro.obs.view trace.jsonl --top 20
+    PYTHONPATH=src python -m repro.obs.view trace.jsonl --by-name --top 20
 """
 
 from __future__ import annotations
@@ -21,8 +26,9 @@ import sys
 
 def load(path: str) -> dict:
     """Normalize either exporter format to one report dict with keys
-    counters/gauges/hists/spans (+ wall_s). Raises ValueError for
-    anything that is not an obs trace."""
+    counters/gauges/hists/spans/events (+ wall_s); ``events`` are the
+    raw timeline spans as ``{name, cat, dur_ms}``. Raises ValueError
+    for anything that is not an obs trace."""
     with open(path) as f:
         text = f.read()
     if not text.strip():
@@ -37,6 +43,12 @@ def load(path: str) -> dict:
             if key not in other:
                 raise ValueError(
                     f"{path}: chrome trace without obs otherData.{key}")
+        # chrome "X" events carry microsecond durations
+        other = dict(other)
+        other["events"] = [
+            {"name": ev["name"], "cat": ev.get("cat", ""),
+             "dur_ms": ev.get("dur", 0.0) / 1e3}
+            for ev in payload["traceEvents"] if ev.get("ph") == "X"]
         return other
     raise ValueError(f"{path}: not an obs trace (expected a chrome "
                      f"trace-event object or obs JSONL)")
@@ -47,6 +59,7 @@ def _from_jsonl(path: str, text: str) -> dict:
     gauges: dict[str, dict] = {}
     hists: dict[str, dict] = {}
     durs: dict[str, list[float]] = {}
+    events: list[dict] = []
     meta: dict = {}
     for i, line in enumerate(text.splitlines(), 1):
         if not line.strip():
@@ -61,6 +74,9 @@ def _from_jsonl(path: str, text: str) -> dict:
             meta = rec
         elif kind == "span":
             durs.setdefault(rec["name"], []).append(rec["dur"])
+            events.append({"name": rec["name"],
+                           "cat": rec.get("cat", ""),
+                           "dur_ms": rec["dur"] * 1e3})
         elif kind == "counter":
             counters[rec["name"]] = rec["value"]
         elif kind == "gauge":
@@ -82,7 +98,37 @@ def _from_jsonl(path: str, text: str) -> dict:
             "min": ds[0] * 1e3, "max": ds[-1] * 1e3,
         }
     return {"wall_s": meta.get("wall_s"), "counters": counters,
-            "gauges": gauges, "hists": hists, "spans": spans}
+            "gauges": gauges, "hists": hists, "spans": spans,
+            "events": events}
+
+
+def by_name(events: list) -> dict:
+    """Collapse raw timeline events to per-name totals:
+    ``{name: {cat, count, total_ms, mean_ms}}``."""
+    agg: dict[str, dict] = {}
+    for ev in events:
+        a = agg.get(ev["name"])
+        if a is None:
+            a = agg[ev["name"]] = {"cat": ev.get("cat", ""),
+                                   "count": 0, "total_ms": 0.0}
+        a["count"] += 1
+        a["total_ms"] += ev.get("dur_ms", 0.0)
+    for a in agg.values():
+        a["mean_ms"] = a["total_ms"] / a["count"]
+    return agg
+
+
+def render_by_name(report: dict, top: int = 0) -> str:
+    agg = by_name(report.get("events", []))
+    lines = [f"{'span':34s} {'cat':>10s} {'count':>7s} "
+             f"{'total_ms':>10s} {'mean_ms':>9s}"]
+    items = sorted(agg.items(), key=lambda kv: -kv[1]["total_ms"])
+    for name, a in (items[:top] if top else items):
+        lines.append(f"{name:34s} {a['cat']:>10s} {a['count']:7d} "
+                     f"{a['total_ms']:10.2f} {a['mean_ms']:9.3f}")
+    if not agg:
+        lines.append("(no timeline events in this trace)")
+    return "\n".join(lines)
 
 
 def render(report: dict, top: int = 0) -> str:
@@ -135,13 +181,19 @@ def main(argv=None) -> int:
     ap.add_argument("trace", help="obs trace file (chrome json or jsonl)")
     ap.add_argument("--top", type=int, default=0,
                     help="show only the N spans with the largest total")
+    ap.add_argument("--by-name", action="store_true",
+                    help="only the per-span-name aggregation "
+                    "(count/total/mean) from the raw timeline events")
     args = ap.parse_args(argv)
     try:
         report = load(args.trace)
     except (OSError, ValueError) as exc:
         print(f"repro.obs.view: {exc}", file=sys.stderr)
         return 1
-    print(render(report, top=args.top))
+    if args.by_name:
+        print(render_by_name(report, top=args.top))
+    else:
+        print(render(report, top=args.top))
     return 0
 
 

@@ -161,12 +161,23 @@ def run_one(kind: str, scenario: str, cfg: DriverCfg,
                 (0 if step.delete is None else step.delete.shape[0]) + \
                 (0 if step.insert is None else step.insert.shape[0])
     wall = rec.wall_s
+    mem = srv.memory_report()
     out = {
         "latency_ms": rec.latency_summary(),
         "throughput": {
             "query_per_s": rec.count("knn") + rec.count("range"),
             "update_pts_per_s": measured_updates,
             "wall_s": wall,
+        },
+        # per-scenario memory: steady = head-version bytes at the end,
+        # peak = retained-window high-water mark; all from nbytes
+        # metadata (repro.obs.memory), so recording it costs no sync
+        "memory": {
+            "steady_bytes": mem["live_bytes"],
+            "peak_window_bytes": mem["peak_window_bytes"],
+            "window_bytes": mem["window_bytes"],
+            "evicted_bytes": mem["evicted_bytes"],
+            "evictions": mem["evictions"],
         },
         "build_s": build_s,
         "final_size": len(srv.head_index),
@@ -182,7 +193,9 @@ def run_one(kind: str, scenario: str, cfg: DriverCfg,
             if op in lat and lat[op]["count"])
         print(f"  [{kind}/{scenario}] {cells} | "
               f"{out['throughput']['query_per_s']:,.0f} q/s, "
-              f"{out['throughput']['update_pts_per_s']:,.0f} upd-pts/s",
+              f"{out['throughput']['update_pts_per_s']:,.0f} upd-pts/s | "
+              f"mem {obs.fmt_bytes(mem['live_bytes'])} steady / "
+              f"{obs.fmt_bytes(mem['peak_window_bytes'])} peak",
               flush=True)
     return out
 
@@ -205,6 +218,55 @@ def _p50(stats: dict | None) -> float:
     return float((stats or {}).get("p50_ms", 0.0))
 
 
+DEFAULT_ROOFLINE = "results/roofline.json"
+
+
+def _cost_model_section(kind: str, counters: dict) -> dict:
+    """Expected-vs-observed device time from captured plan costs.
+
+    The obs-on run records each compiled plan's HLO byte traffic
+    (``plan.cost.*``, see repro.obs.costs). Dividing the dominant kNN
+    plan's bytes by the backend's kNN byte rate from the committed
+    roofline baseline gives the time the cost model *expects* the
+    whole kernel execution to take. Units must match: the rate comes
+    from the roofline cell's own captured plan (``plan_hlo_bytes`` /
+    ``time_s`` — HLO traffic over measured wall), falling back to the
+    analytic ``achieved_gbytes_s`` (useful-work bytes) only for old
+    baselines, where the expected time overshoots by the structure's
+    ``hlo_vs_model_bytes`` factor. Compare against dispatch + device
+    wait — async dispatch hides most device time inside the blocking
+    ``.result()`` — to see what the model misses (queueing, launch
+    gaps, cache effects). Returns nulls when nothing was captured or
+    the baseline is absent."""
+    costs = obs.costs.plan_costs(counters)
+    out = {"plan_costs": costs, "knn_plan_sig": None,
+           "knn_plan_bytes": None, "knn_expected_device_ms": None,
+           "rate_source": None}
+    knn = {s: c for s, c in costs.items() if s.startswith("knn.")}
+    if not knn:
+        return out
+    sig = max(knn, key=lambda s: knn[s].get("bytes", 0))
+    out["knn_plan_sig"] = sig
+    out["knn_plan_bytes"] = knn[sig].get("bytes", 0)
+    try:
+        with open(DEFAULT_ROOFLINE) as f:
+            cell = json.load(f)["results"][kind]["knn"]
+    except (OSError, KeyError, TypeError, ValueError):
+        return out
+    if cell.get("plan_hlo_bytes") and cell.get("time_s"):
+        rate = cell["plan_hlo_bytes"] / cell["time_s"]
+        out["rate_source"] = f"{DEFAULT_ROOFLINE}:plan_hlo_bytes"
+    else:
+        rate = float(cell.get("achieved_gbytes_s", 0)) * 1e9
+        out["rate_source"] = f"{DEFAULT_ROOFLINE}:model_bytes"
+    if rate > 0:
+        out["knn_expected_device_ms"] = \
+            out["knn_plan_bytes"] / rate * 1e3
+    else:
+        out["rate_source"] = None
+    return out
+
+
 def run_attributed(kinds=DEFAULT_KINDS, scenario: str = "uniform",
                    cfg: DriverCfg = DriverCfg(),
                    verbose: bool = True) -> dict:
@@ -220,7 +282,10 @@ def run_attributed(kinds=DEFAULT_KINDS, scenario: str = "uniform",
     for kind in kinds:
         assert not obs.enabled(), "attributed baseline needs obs off"
         off = run_one(kind, scenario, cfg)
-        with obs.recording() as rec_obs:
+        # capture_costs: the obs-on run also AOT-captures each plan's
+        # flops/bytes (during warmup, where the plan misses happen, so
+        # the measured percentiles never see the extra compile)
+        with obs.recording(obs.Recorder(capture_costs=True)) as rec_obs:
             on = run_one(kind, scenario, cfg)
             report = rec_obs.report()
         hists, counters = report["hists"], report["counters"]
@@ -268,6 +333,15 @@ def run_attributed(kinds=DEFAULT_KINDS, scenario: str = "uniform",
                             for k, v in counters.items()
                             if k.startswith("batcher.flush.")},
             },
+            # expected (plan-cost model x roofline rate) vs observed
+            # device wait; see _cost_model_section
+            "cost_model": {
+                **_cost_model_section(kind, counters),
+                "knn_device_wait_observed_ms":
+                    _p50(lat_on.get("knn_wait")),
+            },
+            "memory": {"obs_off": off.get("memory"),
+                       "obs_on": on.get("memory")},
         }
         payload["results"][kind] = entry
         if verbose:
@@ -334,6 +408,11 @@ def main(argv=None):
                for op, s in r["latency_ms"].items() if s["count"]}
         assert {"insert", "delete", "knn", "range", "commit"} <= ops, ops
         _export_obs()
+        if args.json:   # the perf-regression gate replays this payload
+            os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+            with open(args.json, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            print(f"wrote smoke payload -> {args.json}")
         print("serving driver smoke OK")
         return
     cfg = DriverCfg(n=args.n, batch=args.batch, steps=args.steps,

@@ -102,6 +102,17 @@ class SpatialServer:
         self._versions: OrderedDict[int, SpatialIndex] = OrderedDict()
         self._head = 0
         self._versions[0] = index
+        # memory accounting: bytes per retained version from leaf
+        # ``nbytes`` metadata (shape/dtype arithmetic — no device read,
+        # see repro.obs.memory), plus window aggregates. peak_window
+        # is the high-water mark of retained bytes; evicted_* count
+        # window-pressure evictions only (commit-time reclamation is a
+        # barrier, not backpressure).
+        nb = obs.tree_bytes(index.tree)
+        self._version_bytes: dict[int, int] = {0: nb}
+        self.mem = {"live_bytes": nb, "window_bytes": nb,
+                    "peak_window_bytes": nb, "evicted_bytes": 0,
+                    "evictions": 0}
         # recovery state: the last version whose (sticky) overflow flag
         # was read clean, plus every op dispatched since
         self._base = 0
@@ -198,8 +209,19 @@ class SpatialServer:
         self._head += 1
         self._versions[self._head] = index
         self._log.append(op)
+        nb = obs.tree_bytes(index.tree)       # metadata only, no sync
+        self._version_bytes[self._head] = nb
+        mem = self.mem
+        mem["live_bytes"] = nb
+        mem["window_bytes"] += nb
         while len(self._versions) > self.window:
             v, old = self._versions.popitem(last=False)
+            freed = self._version_bytes.pop(v, 0)
+            mem["window_bytes"] -= freed
+            mem["evicted_bytes"] += freed
+            mem["evictions"] += 1
+            obs.count("server.mem.evicted_bytes", freed)
+            obs.count("server.mem.evictions")
             # backpressure: everything up to the evicted version must be
             # done before more updates pile on; its (now free) overflow
             # read doubles as an early deferred check
@@ -215,6 +237,10 @@ class SpatialServer:
                 # fast-forward the recovery base: ops up to v are clean
                 del self._log[: v - self._base]
                 self._base, self._base_index = v, old
+        if mem["window_bytes"] > mem["peak_window_bytes"]:
+            mem["peak_window_bytes"] = mem["window_bytes"]
+        obs.gauge("server.mem.live_bytes", mem["live_bytes"])
+        obs.gauge("server.mem.window_bytes", mem["window_bytes"])
         return self._head
 
     # -- sync points -------------------------------------------------------
@@ -238,6 +264,7 @@ class SpatialServer:
             self._base, self._base_index = self._head, head
             self._log = []
             self._versions = OrderedDict({self._head: head})
+            self._rebase_memory(head)
             self.stats["commits"] += 1
             # commit is THE barrier: deferred obs device reads (span
             # attachments, deferred counters) resolve here for free
@@ -258,8 +285,32 @@ class SpatialServer:
         self._versions = OrderedDict({self._head: idx})
         self._base, self._base_index = self._head, idx
         self._log = []
+        self._rebase_memory(idx)
         self.stats["recoveries"] += 1
         return idx
+
+    # -- memory accounting -------------------------------------------------
+
+    def _rebase_memory(self, index: SpatialIndex) -> None:
+        """The window just collapsed to head only (commit/recover):
+        recompute the byte aggregates from the surviving version."""
+        nb = obs.tree_bytes(index.tree)
+        self._version_bytes = {self._head: nb}
+        mem = self.mem
+        mem["live_bytes"] = nb
+        mem["window_bytes"] = nb
+        if nb > mem["peak_window_bytes"]:
+            mem["peak_window_bytes"] = nb
+        obs.gauge("server.mem.live_bytes", nb)
+        obs.gauge("server.mem.window_bytes", nb)
+
+    def memory_report(self) -> dict:
+        """Copy of the byte aggregates plus per-retained-version bytes.
+        All values come from array metadata — calling this never syncs
+        the device, so it is safe between commits."""
+        return {**self.mem,
+                "version_bytes": dict(self._version_bytes),
+                "retained": len(self._versions)}
 
     def __repr__(self):
         return (f"SpatialServer(kind={self.head_index.kind!r}, "

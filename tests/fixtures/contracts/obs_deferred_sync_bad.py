@@ -14,3 +14,9 @@ class Span:
 class Recorder:
     def count_now(self, name, value):
         self.counters[name] = self.counters.get(name, 0) + value.item()
+
+    def live_bytes(self):
+        # allocator query outside the resolve drain: a mid-dispatch
+        # device round-trip hiding inside "just accounting"
+        return sum(d.memory_stats()["bytes_in_use"]
+                   for d in jax.local_devices())

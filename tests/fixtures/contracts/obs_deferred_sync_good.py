@@ -1,14 +1,29 @@
 # lint-as: src/repro/obs/record.py
 """Clean: device values are attached on the hot path and read only
-inside ``resolve`` — the one sanctioned barrier drain."""
+inside ``resolve`` — the one sanctioned barrier drain. Memory
+accounting outside the drain sticks to ``nbytes`` metadata; the
+allocator snapshot (``memory_stats``) runs inside ``resolve`` only."""
 import jax
+
+
+def tree_bytes(tree):
+    # nbytes is shape/dtype arithmetic — no device read, dispatch-safe
+    return sum(getattr(leaf, "nbytes", 0)
+               for leaf in jax.tree_util.tree_leaves(tree))
 
 
 class Recorder:
     def add_deferred(self, name, value):
         self._pending.append((name, None, value))
 
+    def gauge_bytes(self, name, tree):
+        self.gauge(name, tree_bytes(tree))
+
     def resolve(self):
+        for dev in jax.local_devices():
+            stats = dev.memory_stats()          # sanctioned: barrier
+            if stats:
+                self.gauge("backend.mem.bytes", stats["bytes_in_use"])
         pending, self._pending = self._pending, []
         for name, _, value in pending:
             self.count(name, float(jax.block_until_ready(value)))

@@ -68,6 +68,11 @@ def test_bad_fixtures_count_expected_violations():
     res = lint_fixture("jit_in_shard_map_bad.py")
     assert len([d for d in res.diagnostics
                 if d.rule == "jit-in-shard-map"]) == 2
+    # block_until_ready + .item() + memory_stats outside resolve
+    res = lint_fixture("obs_deferred_sync_bad.py")
+    hits = [d for d in res.diagnostics if d.rule == "obs-deferred-sync"]
+    assert len(hits) == 3
+    assert any("memory_stats" in d.message for d in hits)
 
 
 # -- pragma semantics ------------------------------------------------------

@@ -283,3 +283,175 @@ def test_disabled_mode_records_nothing():
     with obs.recording(rec):
         pass
     assert not rec.counters and not rec.events
+
+
+# -- thread safety ----------------------------------------------------------
+
+def test_concurrent_increments_are_exact():
+    # the batcher's worker threads and the main thread share one
+    # recorder; lost updates would silently undercount
+    import threading
+    rec = obs.Recorder()
+    n_threads, n_iter = 8, 2_000
+
+    def work():
+        for _ in range(n_iter):
+            rec.count("c")
+            rec.count("weighted", 2)
+            rec.observe("h", 1.0)
+            rec.gauge("g", 1)
+
+    with obs.recording(rec):
+        threads = [threading.Thread(target=work)
+                   for _ in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+    total = n_threads * n_iter
+    assert rec.counters["c"] == total
+    assert rec.counters["weighted"] == 2 * total
+    assert rec.hists["h"].count == total
+
+
+# -- memory accounting ------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["porth", "spac-h", "kd"])
+def test_index_nbytes_matches_leaf_sum(kind):
+    import jax
+    idx = make_index(kind, _pts(256, seed=11))
+    expect = sum(leaf.nbytes
+                 for leaf in jax.tree_util.tree_leaves(idx.tree)
+                 if hasattr(leaf, "nbytes"))
+    assert idx.nbytes == expect > 0
+    assert obs.tree_bytes(idx.tree) == expect
+
+
+def test_server_memory_accounting_tracks_versions():
+    srv = SpatialServer.build("spac-h", _pts(256, seed=12),
+                              capacity_points=2_048, window=2)
+    base = srv.memory_report()
+    assert base["live_bytes"] == srv.head_index.nbytes
+    assert base["window_bytes"] == base["live_bytes"]
+    assert base["evictions"] == 0
+
+    srv.insert(_pts(64, seed=13))            # retained: v0 + v1
+    two = srv.memory_report()
+    assert two["retained"] == 2
+    assert two["window_bytes"] == sum(two["version_bytes"].values())
+    assert two["window_bytes"] > two["live_bytes"]
+
+    srv.insert(_pts(64, seed=14))            # evicts v0 (window=2)
+    three = srv.memory_report()
+    assert three["retained"] == 2
+    assert three["evictions"] == 1
+    # eviction reclaimed exactly v0's recorded bytes and the window
+    # total still equals the per-version ledger
+    v0 = min(two["version_bytes"])
+    assert three["evicted_bytes"] == two["version_bytes"][v0]
+    assert v0 not in three["version_bytes"]
+    assert three["window_bytes"] == sum(three["version_bytes"].values())
+    assert three["window_bytes"] < \
+        two["window_bytes"] + max(three["version_bytes"].values())
+    assert three["peak_window_bytes"] >= three["window_bytes"]
+
+    srv.commit()                             # window collapses to head
+    done = srv.memory_report()
+    assert done["retained"] == 1
+    assert done["window_bytes"] == done["live_bytes"]
+    assert done["live_bytes"] == srv.head_index.nbytes
+
+
+def test_server_memory_gauges_only_when_enabled():
+    pts, batch = _pts(256, seed=15), _pts(64, seed=16)
+    rec = obs.Recorder()
+    with obs.recording(rec):
+        srv = SpatialServer.build("spac-h", pts, capacity_points=1_024,
+                                  window=2)
+        srv.insert(batch)
+        srv.commit()
+    assert rec.gauges["server.mem.live_bytes"]["value"] == \
+        srv.head_index.nbytes
+    assert "server.mem.window_bytes" in rec.gauges
+
+    srv2 = SpatialServer.build("spac-h", pts, capacity_points=1_024,
+                               window=2)
+    srv2.insert(batch)
+    srv2.commit()                            # obs off: no recorder
+    assert srv2.memory_report()["live_bytes"] == srv2.head_index.nbytes
+    rec2 = obs.Recorder()
+    with obs.recording(rec2):
+        pass
+    assert "server.mem.live_bytes" not in rec2.gauges
+
+
+def test_memory_snapshots_only_in_resolve():
+    # CPU devices report no allocator stats — the snapshot must be a
+    # silent no-op there, and only run at the resolve barrier
+    rec = obs.Recorder(memory_snapshots=True)
+    with obs.recording(rec):
+        obs.count("x")
+    rec.resolve()
+    backend = [k for k in rec.gauges if k.startswith("backend.mem.")]
+    import jax
+    has_stats = False
+    for dev in jax.local_devices():
+        try:
+            has_stats = bool(dev.memory_stats())
+        except Exception:
+            pass
+    assert bool(backend) == has_stats
+
+
+# -- compile-cost capture ---------------------------------------------------
+
+def test_cost_capture_records_each_plan_once():
+    pts, qpts = _pts(256, seed=17), _pts(8, seed=18)
+    rec = obs.Recorder(capture_costs=True)
+    with obs.recording(rec):
+        idx = make_index("spac-h", pts)
+        idx = idx.insert(_pts(16, seed=21))  # update closure: _run_update
+        idx.knn(qpts, 3)
+        idx.knn(qpts, 3)                     # same plan: no re-capture
+    sigs = obs.costs.plan_costs(rec.counters)
+    knn_sigs = [s for s in sigs if s.startswith("knn.")]
+    assert len(knn_sigs) >= 1
+    for s in knn_sigs:
+        assert sigs[s]["bytes"] > 0          # HLO moves real traffic
+    update_sigs = [s for s in sigs if s.startswith("update.spac-h.insert")]
+    assert update_sigs                       # the insert closure
+    assert rec.counters["plan.cost.captured"] == len(sigs)
+
+
+def test_cost_capture_off_by_default():
+    pts, qpts = _pts(256, seed=19), _pts(8, seed=20)
+    rec = obs.Recorder()
+    with obs.recording(rec):
+        idx = make_index("spac-h", pts)
+        idx.knn(qpts, 3)
+    assert not [k for k in rec.counters if k.startswith("plan.cost.")]
+
+
+# -- view --by-name ---------------------------------------------------------
+
+def test_view_by_name_aggregation(tmp_path, capsys):
+    rec = obs.Recorder()
+    with obs.recording(rec):
+        for _ in range(3):
+            with obs.span("op.alpha", cat="q"):
+                pass
+        with obs.span("op.beta"):
+            pass
+    chrome = tmp_path / "t.json"
+    lines = tmp_path / "t.jsonl"
+    obs.write_chrome_trace(rec, str(chrome))
+    obs.write_jsonl(rec, str(lines))
+    for path in (chrome, lines):
+        report = view.load(str(path))
+        agg = view.by_name(report["events"])
+        assert agg["op.alpha"]["count"] == 3
+        assert agg["op.beta"]["count"] == 1
+        assert agg["op.alpha"]["total_ms"] >= agg["op.alpha"]["mean_ms"]
+        assert view.main([str(path), "--by-name", "--top", "1"]) == 0
+        out = capsys.readouterr().out
+        assert "op.alpha" in out and "op.beta" not in out   # top-1

@@ -1,0 +1,158 @@
+"""repro.obs.regress: direction-aware tolerance bands, missing-metric
+handling, the inject self-test hook, baseline structural validation,
+and the CLI round-trip (--update -> gate -> --replay) on fake suites.
+
+The real suites re-run the smoke tier (minutes); these tests swap in a
+deterministic fake so the gate's *mechanics* are pinned fast — the
+real run is exercised by CI's perf-gate step.
+"""
+
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.obs import regress
+
+
+def _metrics():
+    return {
+        "t.p50_ms": regress.metric(10.0),
+        "t.qps": regress.metric(500.0, "higher"),
+        "s.bytes": regress.metric(100_000, "lower", "struct"),
+        "s.avg_out": regress.metric(0.2, "higher", "struct"),
+    }
+
+
+# -- compare ---------------------------------------------------------------
+
+def test_identical_runs_pass():
+    rows, n = regress.compare(_metrics(), _metrics(), 1.0, 0.25)
+    assert n == 0
+    assert {r[4] for r in rows} == {"ok"}
+
+
+def test_direction_aware_bands():
+    cur = _metrics()
+    cur["t.p50_ms"]["value"] = 25.0       # 2.5x slower: out of 2x band
+    cur["t.qps"]["value"] = 180.0         # 2.8x less throughput
+    cur["s.bytes"]["value"] = 130_000     # +30% memory: out of 25%
+    rows, n = regress.compare(cur, _metrics(), 1.0, 0.25)
+    assert n == 3
+    status = {r[0]: r[4] for r in rows}
+    assert status["t.p50_ms"] == "REGRESSED"
+    assert status["t.qps"] == "REGRESSED"
+    assert status["s.bytes"] == "REGRESSED"
+    assert status["s.avg_out"] == "ok"
+
+
+def test_improvements_do_not_fail():
+    cur = _metrics()
+    cur["t.p50_ms"]["value"] = 2.0        # 5x faster
+    cur["t.qps"]["value"] = 5_000.0
+    rows, n = regress.compare(cur, _metrics(), 1.0, 0.25)
+    assert n == 0
+    status = {r[0]: r[4] for r in rows}
+    assert status["t.p50_ms"] == "improved"
+    assert status["t.qps"] == "improved"
+
+
+def test_missing_metric_is_a_regression_new_is_not():
+    cur = _metrics()
+    del cur["t.qps"]
+    cur["extra"] = regress.metric(1.0)
+    rows, n = regress.compare(cur, _metrics(), 1.0, 0.25)
+    assert n == 1
+    status = {r[0]: r[4] for r in rows}
+    assert status["t.qps"] == "MISSING"
+    assert status["extra"] == "new"
+
+
+def test_floor_absorbs_sub_unit_jitter():
+    # sub-ms latencies and near-empty range outputs jitter several x;
+    # the floor turns their band absolute so they only gate at scale
+    base = {"d.p50_ms": regress.metric(0.4),
+            "d.avg_out": regress.metric(0.1, "higher", "struct")}
+    cur = {"d.p50_ms": regress.metric(1.9),        # 4.75x but < 2ms
+           "d.avg_out": regress.metric(0.0, "higher", "struct")}
+    _, n = regress.compare(cur, base, 1.0, 0.25)
+    assert n == 0
+    cur["d.p50_ms"]["value"] = 40.0                # past floor * band
+    _, n = regress.compare(cur, base, 1.0, 0.25)
+    assert n == 1
+
+
+def test_inject_degrades_time_metrics_only():
+    inj = regress.inject(_metrics(), 2.0)
+    assert inj["t.p50_ms"]["value"] == 20.0        # lower-better: *2
+    assert inj["t.qps"]["value"] == 250.0          # higher-better: /2
+    assert inj["s.bytes"]["value"] == 100_000      # struct untouched
+
+
+# -- committed-baseline validation -----------------------------------------
+
+def test_committed_baselines_validate():
+    assert regress.check_baselines() == []
+
+
+def test_truncated_baseline_is_flagged(tmp_path):
+    for name in ("serve_latency", "fig4_knn", "fig5_range",
+                 "fig10_batch", "roofline", "serve_trace"):
+        (tmp_path / f"{name}.json").write_text("{}")
+    problems = regress.check_baselines(str(tmp_path))
+    assert len(problems) == 6
+
+
+# -- CLI round-trip on fake suites -----------------------------------------
+
+@pytest.fixture
+def fake_suite(monkeypatch):
+    state = {"runs": 0}
+
+    def suite(verbose):
+        state["runs"] += 1
+        return _metrics()
+
+    monkeypatch.setattr(regress, "SUITES", {"fake": suite})
+    return state
+
+
+def test_cli_update_then_gate_then_replay(fake_suite, tmp_path,
+                                          monkeypatch, capsys):
+    # committed-baseline validation looks at results/ — point it at a
+    # valid tree (the repo's own) via cwd; tmp files hold the rest
+    base = tmp_path / "base.json"
+    snap = tmp_path / "snap.json"
+    assert regress.main(["--suites", "fake", "--update", "--quiet",
+                         "--baseline", str(base)]) == 0
+    assert json.loads(base.read_text())["metrics"]["t.p50_ms"][
+        "value"] == 10.0
+    assert fake_suite["runs"] == 1
+
+    # clean gate run: exit 0, snapshot written with the comparison
+    assert regress.main(["--suites", "fake", "--baseline", str(base),
+                         "--snapshot", str(snap), "--quiet"]) == 0
+    payload = json.loads(snap.read_text())
+    assert payload["regressed"] == 0
+    assert {r["status"] for r in payload["rows"]} == {"ok"}
+    assert fake_suite["runs"] == 2
+
+    # replay re-compares without re-running suites; the injected 2x
+    # regression must fail the gate (the CI self-test shape)
+    assert regress.main(["--replay", str(snap), "--baseline", str(base),
+                         "--inject-scale", "2", "--tol", "0.5",
+                         "--no-snapshot", "--quiet"]) == 1
+    assert fake_suite["runs"] == 2
+    out = capsys.readouterr().out
+    assert "REGRESSED" in out and "FAIL" in out
+
+
+def test_cli_errors(fake_suite, tmp_path):
+    assert regress.main(["--suites", "nope", "--no-snapshot"]) == 2
+    assert regress.main(["--suites", "fake", "--baseline",
+                         str(tmp_path / "absent.json"),
+                         "--no-snapshot", "--quiet"]) == 2
+    assert regress.main(["--replay", str(tmp_path / "absent.json"),
+                         "--baseline", str(tmp_path / "absent.json"),
+                         "--no-snapshot"]) == 2
