@@ -25,6 +25,7 @@ Run:  PYTHONPATH=src python -m benchmarks.roofline --spatial --n 20000
 from __future__ import annotations
 
 import argparse
+import functools
 import glob
 import json
 import math
@@ -78,6 +79,7 @@ def spatial_sweep(kinds=SPATIAL_KINDS, n: int = 20_000, nq: int = 256,
                              gen.DEFAULT_HI // box_frac)
     ins = common.points_for(dist, batch, seed=3)
     models = kernel_models(n, nq, k, dim, batch)
+    models["knn_chunked"] = models["knn"]   # same useful work, old route
     results: dict = {}
     # capture_costs: each new query/update plan is AOT-compiled once
     # (during common.timed's warmup call) and its while-loop-aware HLO
@@ -89,12 +91,19 @@ def spatial_sweep(kinds=SPATIAL_KINDS, n: int = 20_000, nq: int = 256,
             idx = common.build_index(kind, pts, phi=phi,
                                      capacity_points=n + batch)
             timers = {
+                # auto routes to the fused frontier kernel at this size;
+                # knn_chunked pins the host-orchestrated traversal so
+                # the baseline keeps before/after side by side
                 "knn": lambda: common.timed(idx.knn, ind_q, k),
+                "knn_chunked": lambda: common.timed(
+                    functools.partial(idx.knn, impl="frontier"),
+                    ind_q, k),
                 "range_count": lambda: common.timed(idx.range_count,
                                                     lo, hi),
                 "insert": lambda: common.timed(idx.insert, ins),
             }
-            sig_prefix = {"knn": "knn.", "range_count": "range_count.",
+            sig_prefix = {"knn": "knn.", "knn_chunked": "knn.",
+                          "range_count": "range_count.",
                           "insert": f"update.{kind}.insert."}
             row: dict = {}
             for kern, run_timed in timers.items():
@@ -145,6 +154,69 @@ def spatial_sweep(kinds=SPATIAL_KINDS, n: int = 20_000, nq: int = 256,
     return {"config": {"n": n, "nq": nq, "k": k, "dim": dim,
                        "dist": dist, "batch": batch, "phi": phi},
             "kinds": list(kinds), "results": results, "obs": report}
+
+
+FRONTIER_BLOCK_QS = (8, 16, 32, 64)
+FRONTIER_BLOCK_PS = (128, 256, 512, 1024)
+
+
+@functools.lru_cache(maxsize=None)
+def _frontier_cell(k: int, block_q: int, block_p: int):
+    """One jitted fused-frontier closure per tile cell (sweep helper)."""
+    import jax
+
+    from repro.kernels.frontier.ops import knn_frontier_impl
+    return jax.jit(functools.partial(knn_frontier_impl, k=k,
+                                     block_q=block_q, block_p=block_p))
+
+
+def block_sweep(kinds=SPATIAL_KINDS, n: int = 20_000, nq: int = 64,
+                k: int = 10, dist: str = "uniform", phi: int = 32,
+                block_qs=FRONTIER_BLOCK_QS, block_ps=FRONTIER_BLOCK_PS,
+                verbose: bool = True) -> dict:
+    """Tile sweep for the fused frontier kernel: time every
+    (block_q, block_p) cell at the serve-smoke query shape, record
+    achieved GB/s per cell as obs gauges
+    (``roofline.block_sweep.<kind>.bq<q>.bp<p>.gbytes_s``) and emit the
+    chosen defaults (min total time across backends) — the numbers
+    behind ``kernels/frontier/tuning.py``, so future kernel PRs tune
+    from data instead of constants."""
+    pts = common.points_for(dist, n)
+    q, _ = common.knn_queries(dist, nq)
+    flops, byts = kernel_models(n, nq, k, 2, 64)["knn"]
+    cells: dict = {}
+    totals: dict = {}
+    with obs.recording() as rec_obs:
+        for kind in kinds:
+            idx = common.build_index(kind, pts, phi=phi)
+            v = idx.view()
+            args = (v.pts, v.valid, v.active, v.bbox_lo, v.bbox_hi, q)
+            for bq in block_qs:
+                for bp in block_ps:
+                    fn = _frontier_cell(k, bq, bp)
+                    t, _ = common.timed(fn, *args)
+                    gbs = byts / t / 1e9
+                    cells[f"{kind}.bq{bq}.bp{bp}"] = {
+                        "time_s": t, "achieved_gbytes_s": gbs}
+                    totals[(bq, bp)] = totals.get((bq, bp), 0.0) + t
+                    obs.gauge(f"roofline.block_sweep.{kind}"
+                              f".bq{bq}.bp{bp}.gbytes_s", gbs)
+            if verbose:
+                best_kind = min(
+                    ((c["time_s"], key) for key, c in cells.items()
+                     if key.startswith(f"{kind}.")))
+                print(f"{kind:10s} best tile {best_kind[1]} "
+                      f"{best_kind[0] * 1e3:.2f}ms", flush=True)
+        report = rec_obs.report()
+    bq, bp = min(totals, key=totals.get)
+    chosen = {"block_q": bq, "block_p": bp,
+              "rule": "min total time across kinds"}
+    if verbose:
+        print(f"chosen defaults: block_q={bq} block_p={bp} "
+              f"(kernels/frontier/tuning.py)", flush=True)
+    return {"config": {"n": n, "nq": nq, "k": k, "dist": dist,
+                       "phi": phi, "kinds": list(kinds)},
+            "cells": cells, "chosen": chosen, "obs": report}
 
 
 def spatial_table(payload: dict) -> str:
@@ -213,14 +285,27 @@ def main():
     ap.add_argument("--json", nargs="?", const=DEFAULT_JSON, default=None,
                     metavar="PATH", help="run the spatial sweep and "
                     f"write its baseline (default {DEFAULT_JSON})")
+    ap.add_argument("--block-sweep", action="store_true",
+                    help="sweep fused-frontier (block_q, block_p) tiles "
+                    "at the serve-smoke query shape; lands in the --json "
+                    "payload under 'block_sweep'")
     args = ap.parse_args()
-    if args.spatial or args.json:
-        print(f"== spatial-kernel roofline (n={args.n}, nq={args.nq}, "
-              f"k={args.k}, {args.dist}) ==")
-        payload = spatial_sweep(kinds=tuple(args.kinds.split(",")),
-                                n=args.n, nq=args.nq, k=args.k,
-                                dist=args.dist)
-        print(spatial_table(payload))
+    if args.spatial or args.json or args.block_sweep:
+        payload = None
+        if args.spatial or args.json:
+            print(f"== spatial-kernel roofline (n={args.n}, "
+                  f"nq={args.nq}, k={args.k}, {args.dist}) ==")
+            payload = spatial_sweep(kinds=tuple(args.kinds.split(",")),
+                                    n=args.n, nq=args.nq, k=args.k,
+                                    dist=args.dist)
+            print(spatial_table(payload))
+        if args.block_sweep:
+            print(f"== fused-frontier tile sweep (n={args.n}, nq=64, "
+                  f"k={args.k}, {args.dist}) ==")
+            bs = block_sweep(kinds=tuple(args.kinds.split(",")),
+                             n=args.n, k=args.k, dist=args.dist)
+            payload = payload or {}
+            payload["block_sweep"] = bs
         if args.json:
             common.write_json(args.json, payload,
                               "spatial-kernel roofline baseline")

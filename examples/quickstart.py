@@ -34,16 +34,24 @@ print(f"after +2000/-1000: {len(idx)} points")
 # Queries are exact by default: the engine sizes its own buffers (no
 # max_rows/cap/truncated on this surface) and `impl="auto"` routes each
 # kNN to the Pallas brute-force kernel when the index fits a flat scan,
-# or to the chunked frontier traversal otherwise.
+# or to the fused frontier kernel otherwise (on-chip pruned traversal
+# with compensated distances — exact at any coordinate magnitude that
+# keeps the per-tile spread in the f32 window).
 qpts = gen.uniform(jax.random.PRNGKey(2), 100, dim=2)
 d2, nbrs, ok = idx.knn_points(qpts, k=10)            # exact batched kNN
 print(f"10-NN of first query: d2={d2[0, :3]}... -> {nbrs[0, 0]}")
 
-# forcing an impl pins the route (auto picks by index size):
-d2_fr, _ = idx.knn(qpts, k=10, impl="frontier")      # tree traversal
+# forcing an impl pins the route (auto picks by index size). Full
+# list: frontier | pallas-frontier | pallas-frontier-interpret | flat
+# | pallas | pallas-interpret | ref — see ROADMAP "Query API". Tile
+# sizes for the fused kernel are roofline-tuned, not guessed:
+#   PYTHONPATH=src python -m benchmarks.roofline --block-sweep --json
+d2_fr, _ = idx.knn(qpts, k=10, impl="frontier")      # chunked traversal
+d2_fu, _ = idx.knn(qpts, k=10, impl="pallas-frontier")  # fused kernel
 d2_bf, _ = idx.knn(qpts, k=10, impl="ref")           # flat scan (jnp)
-assert bool(jnp.allclose(d2_fr, d2_bf))              # both exact
-print("frontier and brute-force impls agree")
+assert bool(jnp.allclose(d2_fr, d2_bf))              # all exact
+assert bool(jnp.allclose(d2_fu, d2_bf))
+print("frontier, fused-frontier and brute-force impls agree")
 
 lo = jnp.array([[0, 0]], jnp.int32)
 hi = jnp.array([[1 << 18, 1 << 18]], jnp.int32)

@@ -221,10 +221,12 @@ def knn(index: DistIndex, qpts, k: int, mesh, chunk: int = 8,
     (d2 (Q, k) ascending, points (Q, k, dim), valid (Q, k)).
 
     ``impl="frontier"`` runs the chunked frontier traversal per shard;
-    ``impl="flat"`` the brute-force scan (``kernel`` picks the knn
-    kernel flavor: auto/pallas/interpret/ref). Both use the unjitted
+    ``impl="pallas-frontier"`` the fused frontier kernel;
+    ``impl="flat"`` the brute-force scan (``kernel`` picks the kernel
+    flavor: auto/pallas/pallas-interpret/ref). All use the unjitted
     ``_impl`` spellings — required inside shard_map (miscompile note in
     ROADMAP.md)."""
+    from ..kernels.frontier import ops as frontier_ops
     from ..kernels.knn import ops as knn_ops
     axis = index.axis
 
@@ -233,6 +235,10 @@ def knn(index: DistIndex, qpts, k: int, mesh, chunk: int = 8,
         view = tree.view()
         if impl == "frontier":
             d2, ids = Q.knn_impl(view, q, k, chunk)
+        elif impl == "pallas-frontier":
+            d2, ids = frontier_ops.knn_frontier_impl(
+                view.pts, view.valid, view.active, view.bbox_lo,
+                view.bbox_hi, q, k=k, impl=kernel)
         else:
             flat_pts, flat_ok = Q.flatten_view(view)
             d2, ids = knn_ops.knn_bruteforce_impl(q, flat_pts, flat_ok,

@@ -22,10 +22,16 @@ silently violated. The :class:`QueryEngine` owns those knobs instead:
 * **Execution planner.** ``impl="auto"`` routes kNN to the Pallas
   brute-force kernel (:mod:`repro.kernels.knn`) when the index's slot
   count ``R*C`` fits a flat-scan budget (small indexes, post-compact
-  trees) and to the chunked frontier traversal otherwise, with
-  ``chunk`` auto-picked from R. Forced spellings: ``"frontier"``,
-  ``"flat"`` (brute force, kernel auto), ``"pallas"``,
-  ``"pallas-interpret"``, ``"ref"``.
+  trees) and to the fused frontier kernel
+  (:mod:`repro.kernels.frontier`) otherwise — pruned traversal with
+  the running top-k on-chip, compensated (centered) MXU distances for
+  selection, and a direct ``|q - p|^2`` rescore of the k hits, so the
+  returned distances match the chunked traversal at any coordinate
+  magnitude. Forced
+  spellings: ``"frontier"`` (chunked host-orchestrated traversal,
+  ``chunk`` auto-picked from R), ``"pallas-frontier"``,
+  ``"pallas-frontier-interpret"``, ``"flat"`` (brute force, kernel
+  auto), ``"pallas"``, ``"pallas-interpret"``, ``"ref"``.
 * **Distributed.** The same engine fronts
   :class:`repro.core.index.DistributedIndex`: per-shard queries run the
   unjitted ``*_impl`` spellings inside shard_map (required — see the
@@ -46,6 +52,7 @@ import jax
 import jax.numpy as jnp
 
 from .. import obs
+from ..kernels.frontier import ops as frontier_ops
 from ..kernels.knn import ops as knn_ops
 from . import queries
 from .leafstore import BIG
@@ -59,8 +66,9 @@ DEFAULT_CAP = 512
 # MXU tiles); above it the bbox pruning wins
 DEFAULT_FLAT_BUDGET = 1 << 15
 
-KNN_IMPLS = ("auto", "frontier", "flat", "pallas", "pallas-interpret",
-             "ref")
+KNN_IMPLS = ("auto", "frontier", "pallas-frontier",
+             "pallas-frontier-interpret", "flat", "pallas",
+             "pallas-interpret", "ref")
 
 _STATS = {"traces": 0}
 
@@ -115,6 +123,14 @@ def _knn_closure(q: int, dim: int, dtype: str, k: int, route: str,
             _STATS["traces"] += 1
             obs.count("engine.trace")
             d2, ids = queries.knn_impl(view, qpts, k, param)
+            return canonical_knn(d2, ids)
+    elif route == "pallas-frontier":
+        def run(view, qpts):
+            _STATS["traces"] += 1
+            obs.count("engine.trace")
+            d2, ids = frontier_ops.knn_frontier_impl(
+                view.pts, view.valid, view.active, view.bbox_lo,
+                view.bbox_hi, qpts, k=k, impl=param)
             return canonical_knn(d2, ids)
     else:
         def run(view, qpts):
@@ -175,18 +191,28 @@ class QueryEngine:
     # -- planner -----------------------------------------------------------
 
     def plan_knn(self, rows: int, cols: int, impl: str = "auto"):
-        """Resolve an impl spelling to (route, static param): either
-        ("frontier", chunk) or ("flat", kernel_impl)."""
+        """Resolve an impl spelling to (route, static param): one of
+        ("frontier", chunk), ("pallas-frontier", kernel_impl) or
+        ("flat", kernel_impl)."""
+        if impl == "interpret":
+            raise ValueError(
+                'impl="interpret" is not a spelling; use the canonical '
+                '"pallas-interpret" (one name across engine and kernels)')
         if impl not in KNN_IMPLS:
             raise ValueError(f"unknown kNN impl {impl!r}; one of "
                              f"{KNN_IMPLS}")
         if impl == "auto":
             impl = "flat" if rows * cols <= self.flat_budget else \
-                "frontier"
+                "pallas-frontier"
         if impl == "frontier":
             return "frontier", auto_chunk(rows)
+        if impl in ("pallas-frontier", "pallas-frontier-interpret"):
+            kernel = "auto" if impl == "pallas-frontier" else \
+                "pallas-interpret"
+            return "pallas-frontier", kernel
         kernel = {"flat": "auto", "pallas": "pallas",
-                  "pallas-interpret": "interpret", "ref": "ref"}[impl]
+                  "pallas-interpret": "pallas-interpret",
+                  "ref": "ref"}[impl]
         return "flat", kernel
 
     # -- local queries -----------------------------------------------------
@@ -293,6 +319,9 @@ class QueryEngine:
         obs.count(f"engine.route.{route}")
         if route == "frontier":
             return D.knn(index, qpts, k, mesh, chunk=param)
+        if route == "pallas-frontier":
+            return D.knn(index, qpts, k, mesh, impl="pallas-frontier",
+                         kernel=param)
         return D.knn(index, qpts, k, mesh, impl="flat", kernel=param)
 
     def range_count_dist(self, index, lo, hi, mesh):

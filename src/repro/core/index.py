@@ -517,8 +517,9 @@ class SpatialIndex:
         """Exact batched kNN -> (d2 (Q, k) ascending, flat ids (Q, k)).
 
         ``impl``: "auto" (planner routes to the Pallas brute-force
-        kernel or the frontier traversal), or a forced spelling —
-        "frontier", "flat", "pallas", "pallas-interpret", "ref"."""
+        kernel or the fused frontier kernel), or a forced spelling —
+        "frontier", "pallas-frontier", "pallas-frontier-interpret",
+        "flat", "pallas", "pallas-interpret", "ref"."""
         return self._engine.knn(self.view(), jnp.asarray(qpts), k,
                                 impl=impl)
 

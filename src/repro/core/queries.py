@@ -130,10 +130,18 @@ def _boxes_overlap(lo_a, hi_a, lo_b, hi_b):
 def _range_rows(view: LeafView, lo, hi, max_rows: int):
     overlap = _boxes_overlap(view.bbox_lo, view.bbox_hi, lo[None, :],
                              hi[None, :]) & view.active
+    R = overlap.shape[0]
     n_overlap = jnp.sum(overlap, dtype=jnp.int32)
-    key = jnp.where(overlap, jnp.arange(overlap.shape[0], dtype=jnp.int32),
-                    jnp.int32(overlap.shape[0]))
-    rows = jnp.argsort(key)[:max_rows].astype(jnp.int32)
+    # top_k on the negated selection key picks the same rows, in the
+    # same order, as the old full `argsort(key)[:max_rows]` over R —
+    # overlapping rows keep key -row (so descending top_k yields row
+    # order), the rest collapse to -R and tie-break by lowest index,
+    # exactly like the stable argsort — without sorting all R rows.
+    # Engine buckets can exceed R; the slice semantics cap at R.
+    key = jnp.where(overlap, -jnp.arange(R, dtype=jnp.int32),
+                    jnp.int32(-R))
+    _, rows = jax.lax.top_k(key, min(int(max_rows), R))
+    rows = rows.astype(jnp.int32)
     rows_ok = overlap[rows]
     truncated = n_overlap > max_rows
     return rows, rows_ok, truncated

@@ -1,0 +1,125 @@
+"""Fused frontier-kNN Pallas kernel.
+
+One launch over a ``(query_blocks, groups)`` grid.  The per-block group
+visit order and lower bounds arrive as scalar-prefetch operands, so the
+point tile for step ``j`` is fetched data-dependently via the BlockSpec
+``index_map`` — the gather the chunked frontier did on the host happens
+in the kernel's pipeline instead.  The running top-k lives in VMEM
+scratch across the inner grid axis, and a per-block ``pl.when`` skips the
+whole tile (matmul *and* its HBM reads) once the sorted lower bound
+passes the block's worst kth-best distance.
+
+Distances use the centered MXU identity: points are pre-centered per
+group (``prep.py``) and the query block subtracts the same center before
+the matmul, so intermediates stay tile-local and the result is bit-exact
+against the frontier's ``(q-p)^2`` in the regime the index guarantees
+(spatially tight groups).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.frontier.prep import BIG, FrontierPrep
+
+
+def _tile_distances(qc, pc, ok):
+    """Centered ``|qc|^2 - 2 qc.pc + |pc|^2`` for one (block_q, P) tile.
+
+    Shared verbatim by the jnp reference (``ref.py``) so both spellings
+    evaluate the identical expression graph — bit-parity by construction,
+    not by tolerance.
+    """
+    qn = jnp.sum(qc * qc, axis=1)
+    pn = jnp.sum(pc * pc, axis=1)
+    cross = jax.lax.dot_general(qc, pc, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    d2 = qn[:, None] - 2.0 * cross + pn[None, :]
+    return jnp.where(ok[None, :], jnp.maximum(d2, 0.0), BIG)
+
+
+def _merge_topk(dist, idx, d2, ids, k):
+    """Merge a tile's distances into the running top-k (shared with ref)."""
+    all_d = jnp.concatenate([dist, d2], axis=1)
+    all_i = jnp.concatenate([idx, ids], axis=1)
+    neg, arg = jax.lax.top_k(-all_d, k)
+    return -neg, jnp.take_along_axis(all_i, arg, axis=1)
+
+
+def _frontier_kernel(order_ref, glb_ref, q_ref, p_ref, ok_ref, c_ref,
+                     d2_ref, id_ref, dist_scr, idx_scr, *, k, ppg):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        dist_scr[...] = jnp.full_like(dist_scr[...], BIG)
+        idx_scr[...] = jnp.full_like(idx_scr[...], -1)
+
+    # Early exit: group bounds arrive ascending, and the block's worst
+    # kth-best only shrinks, so once a bound fails it fails for every
+    # later step — the predicated skip visits exactly the same prefix the
+    # reference while_loop does.
+    live = glb_ref[i, j] <= jnp.max(dist_scr[:, k - 1])
+
+    @pl.when(live)
+    def _step():
+        g = order_ref[i, j]
+        qc = q_ref[...] - c_ref[...]                    # (block_q, D)
+        d2 = _tile_distances(qc, p_ref[...], ok_ref[...])
+        ids = g * ppg + jax.lax.broadcasted_iota(
+            jnp.int32, d2.shape, 1)
+        dist_scr[...], idx_scr[...] = _merge_topk(
+            dist_scr[...], idx_scr[...], d2, ids, k)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _done():
+        d2_ref[...] = dist_scr[...]
+        id_ref[...] = jnp.where(dist_scr[...] >= BIG, -1, idx_scr[...])
+
+
+def knn_frontier_pallas(pr: FrontierPrep, *, k: int,
+                        interpret: bool = False):
+    """Run the fused kernel over prepared operands; returns (d2, ids).
+
+    Outputs are in sorted-query order, shape ``(Qp, k)`` — ``ops.py``
+    undoes the sort and padding.
+    """
+    nqb, G = pr.order.shape
+    bq, P = pr.block_q, pr.points_per_group
+    D = pr.qs.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(nqb, G),
+        in_specs=[
+            pl.BlockSpec((bq, D), lambda i, j, o, b: (i, 0)),
+            pl.BlockSpec((P, D), lambda i, j, o, b: (o[i, j], 0)),
+            pl.BlockSpec((P,), lambda i, j, o, b: (o[i, j],)),
+            pl.BlockSpec((1, D), lambda i, j, o, b: (o[i, j], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bq, k), lambda i, j, o, b: (i, 0)),
+            pl.BlockSpec((bq, k), lambda i, j, o, b: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bq, k), jnp.float32),
+            pltpu.VMEM((bq, k), jnp.int32),
+        ],
+    )
+    fn = pl.pallas_call(
+        functools.partial(_frontier_kernel, k=k, ppg=P),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((pr.qs.shape[0], k), jnp.float32),
+            jax.ShapeDtypeStruct((pr.qs.shape[0], k), jnp.int32),
+        ],
+        interpret=interpret,
+    )
+    d2, ids = fn(pr.order, pr.glb, pr.qs, pr.pts, pr.ok, pr.centers)
+    return d2, ids

@@ -1,0 +1,78 @@
+"""Impl routing for the fused frontier kernel.
+
+Canonical spellings only (the engine and the kernel layer share one
+vocabulary — see ``kernels/knn/ops.py`` for the same rule on the flat
+kernel):
+
+* ``auto``             — ``pallas`` on TPU, ``ref`` elsewhere
+* ``pallas``           — compiled Pallas TPU kernel
+* ``pallas-interpret`` — same kernel under the Pallas interpreter (CPU CI)
+* ``ref``              — jnp while_loop mirror, bit-identical to the kernel
+
+``knn_frontier_impl`` is the unjitted spelling for use inside
+``shard_map`` regions (the nested-jit miscompile — ROADMAP "Known
+constraints"); ``knn_frontier`` is the jitted module-level alias.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.frontier import kernel, ref, tuning
+from repro.kernels.frontier.prep import BIG, prepare
+
+FRONTIER_IMPLS = ("auto", "pallas", "pallas-interpret", "ref")
+
+
+def canonical_impl(impl: str) -> str:
+    """Validate an impl spelling; reject legacy aliases loudly."""
+    if impl == "interpret":
+        raise ValueError(
+            'impl="interpret" is not a spelling; use the canonical '
+            '"pallas-interpret" (one name across engine and kernels)')
+    if impl not in FRONTIER_IMPLS:
+        raise ValueError(
+            f"unknown frontier impl {impl!r}; expected one of "
+            f"{FRONTIER_IMPLS}")
+    return impl
+
+
+def knn_frontier_impl(pts, valid, active, bbox_lo, bbox_hi, queries, *,
+                      k: int, impl: str = "auto",
+                      block_q=None, block_p=None):
+    """Fused frontier kNN over leaf-view arrays; returns (d2, ids).
+
+    ``ids`` are flat ``row * C + col`` candidate ids (-1 past the end),
+    matching the chunked frontier in ``core/queries.py``. The centered
+    MXU identity *selects* the candidates on-chip; the returned
+    distances are then rescored with the direct ``|q - p|^2`` the
+    chunked traversal uses, so scores stay well-conditioned even when
+    one tile spans a whole shard (tile-local spread >> neighbor
+    distances, where the expanded identity cancels catastrophically)
+    and are bit-identical to the chunked route for the same candidate.
+    """
+    impl = canonical_impl(impl)
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    bq, bp = tuning.tiles(impl, block_q, block_p)
+    pr = prepare(pts, valid, active, bbox_lo, bbox_hi, queries,
+                 block_q=bq, block_p=bp)
+    if impl == "ref":
+        d2, ids = ref.knn_frontier_ref(pr, k=k)
+    else:
+        d2, ids = kernel.knn_frontier_pallas(
+            pr, k=k, interpret=(impl == "pallas-interpret"))
+    q = queries.shape[0]
+    d2, ids = d2[:q][pr.inv], ids[:q][pr.inv]
+    flat = pts.astype(jnp.float32).reshape(-1, pts.shape[-1])
+    diff = flat[jnp.clip(ids, 0)] - \
+        queries.astype(jnp.float32)[:, None, :]
+    d2 = jnp.where(ids < 0, BIG, jnp.sum(diff * diff, axis=-1))
+    d2, ids = jax.lax.sort((d2, ids), dimension=-1, num_keys=2)
+    return d2, jnp.where(d2 >= BIG, -1, ids)
+
+
+knn_frontier = jax.jit(
+    knn_frontier_impl,
+    static_argnames=("k", "impl", "block_q", "block_p"))

@@ -234,9 +234,18 @@ def check_baselines(root: str = RESULTS_DIR) -> list:
         "fig4_knn.json": lambda d: bool(d["qps"]),
         "fig5_range.json": lambda d: bool(d["qps"]),
         "fig10_batch.json": lambda d: bool(d["update_pts_per_s"]),
-        "roofline.json": lambda d: bool(d["results"]) and "obs" in d,
+        # the roofline baseline must carry the fused-frontier tile
+        # sweep (PR 9) next to the per-kernel cells, and the serve
+        # trace's captured plan costs must include the pallas-frontier
+        # route — the perf gate sees the new kernel's metrics, not just
+        # the legacy ones
+        "roofline.json": lambda d: bool(d["results"]) and "obs" in d
+        and "chosen" in d["block_sweep"],
         "serve_trace.json": lambda d: all(
-            "knn_p50_ms" in r for r in d["results"].values()),
+            "knn_p50_ms" in r for r in d["results"].values())
+        and any("pallas-frontier" in s
+                for r in d["results"].values()
+                for s in r["cost_model"].get("plan_costs", {})),
     }
     problems = []
     for name, ok in specs.items():

@@ -161,11 +161,63 @@ def test_knn_kernel(Q, N, dim, k):
     ok = rng.random(N) > 0.1
     d_got, i_got = knn_ops.knn_bruteforce(
         jnp.asarray(qs), jnp.asarray(ps), jnp.asarray(ok), k=k,
-        block_q=32, block_p=128, impl="interpret")
+        block_q=32, block_p=128, impl="pallas-interpret")
     d_want, i_want = knn_ops.knn_bruteforce(
         jnp.asarray(qs), jnp.asarray(ps), jnp.asarray(ok), k=k, impl="ref")
     np.testing.assert_allclose(np.asarray(d_got), np.asarray(d_want),
                                rtol=1e-4, atol=1e-5)
+
+
+def test_knn_kernel_rejects_legacy_interpret_alias():
+    """One canonical spelling across layers: "interpret" must fail loudly
+    at the kernel boundary (the engine rejects it too)."""
+    q = jnp.zeros((4, 2), jnp.float32)
+    p = jnp.zeros((8, 2), jnp.float32)
+    ok = jnp.ones(8, bool)
+    with pytest.raises(ValueError, match="pallas-interpret"):
+        knn_ops.knn_bruteforce_impl(q, p, ok, k=2, impl="interpret")
+    with pytest.raises(ValueError, match="unknown knn kernel impl"):
+        knn_ops.knn_bruteforce_impl(q, p, ok, k=2, impl="mxu")
+
+
+# ---------------------------------------------------------------------------
+# fused frontier knn
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("R,C,dim,Q,k,bq,bp", [
+    (37, 16, 2, 33, 8, 8, 64),      # ragged everything
+    (64, 8, 3, 16, 4, 16, 128),     # 3-d, whole blocks
+    (5, 4, 2, 7, 32, 8, 8),         # k > live points
+])
+def test_frontier_kernel_interpret_matches_ref(R, C, dim, Q, k, bq, bp):
+    """Interpret-mode fused kernel is bit-identical to its jnp mirror:
+    same prep, same tile expressions, same visit prefix."""
+    from repro.kernels.frontier import knn_frontier_impl
+
+    rng = np.random.default_rng(11)
+    pts = jnp.asarray(rng.integers(0, 1 << 10, (R, C, dim)), jnp.int32)
+    valid = jnp.asarray(rng.random((R, C)) > 0.2)
+    active = jnp.asarray(rng.random(R) > 0.1)
+    lo = jnp.where(valid[..., None], pts, jnp.int32(1 << 30)).min(axis=1)
+    hi = jnp.where(valid[..., None], pts, jnp.int32(-1)).max(axis=1)
+    q = jnp.asarray(rng.integers(0, 1 << 10, (Q, dim)), jnp.int32)
+
+    args = (pts, valid, active, lo, hi, q)
+    d_ref, i_ref = knn_frontier_impl(*args, k=k, impl="ref",
+                                     block_q=bq, block_p=bp)
+    d_int, i_int = knn_frontier_impl(*args, k=k, impl="pallas-interpret",
+                                     block_q=bq, block_p=bp)
+    np.testing.assert_array_equal(np.asarray(d_int), np.asarray(d_ref))
+    np.testing.assert_array_equal(np.asarray(i_int), np.asarray(i_ref))
+
+
+def test_frontier_kernel_rejects_legacy_interpret_alias():
+    from repro.kernels.frontier import knn_frontier_impl
+
+    z = jnp.zeros((4, 4, 2), jnp.int32)
+    with pytest.raises(ValueError, match="pallas-interpret"):
+        knn_frontier_impl(z, jnp.ones((4, 4), bool), jnp.ones(4, bool),
+                          z[:, 0], z[:, 0], z[:, 0], k=2, impl="interpret")
 
 
 # ---------------------------------------------------------------------------

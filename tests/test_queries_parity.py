@@ -12,6 +12,13 @@ of both distance formulas (the frontier's (q-p)^2 sum and the kernel's
 representable in float32 — and the seed is chosen so no query has a
 tie at the k boundary. Under those conditions "identical ids/d2" is
 well-defined and asserted with assert_array_equal.
+
+The fused frontier kernel (impl="pallas-frontier") carries a stronger
+guarantee: its *centered* MXU identity subtracts the per-group bbox
+midpoint before the matmul, so exactness needs only the tile-local
+spread in the window, not the absolute coordinates — asserted by the
+adversarial large-magnitude test below, where the plain identity is
+off by orders of magnitude.
 """
 
 from __future__ import annotations
@@ -29,7 +36,8 @@ from repro.core import BACKENDS, engine, make_index, queries
 PHI = 8
 N, Q, K = 700, 16, 5
 COORD_HI = 1 << 10          # exact-arithmetic window (see module doc)
-IMPLS = ("frontier", "pallas-interpret", "ref")
+IMPLS = ("frontier", "flat", "pallas-interpret", "pallas-frontier",
+         "pallas-frontier-interpret", "ref")
 
 
 def oracle_knn_d2(pts: np.ndarray, qs: np.ndarray, k: int) -> np.ndarray:
@@ -74,8 +82,9 @@ def indexes():
 
 @pytest.mark.parametrize("kind", sorted(BACKENDS))
 def test_knn_impl_parity(indexes, kind):
-    """frontier, pallas-interpret and ref return identical ids/d2, and
-    match the numpy brute-force oracle bit-for-bit."""
+    """Every impl route — chunked frontier, flat scan (jnp and Pallas
+    interpret), fused frontier (ref and Pallas interpret) — returns
+    identical ids/d2 and matches the numpy oracle bit-for-bit."""
     idx = indexes[kind]
     want_d2 = oracle_knn_d2(PTS, np.asarray(QS), K)
     results = {impl: idx.knn(QS, K, impl=impl) for impl in IMPLS}
@@ -116,6 +125,112 @@ def test_knn_fewer_points_than_k(indexes):
         d2, ids = idx.knn(QS, 8, impl=impl)
         assert (np.asarray(ids)[:, 3:] == -1).all(), impl
         assert (np.asarray(ids)[:, :3] >= 0).all(), impl
+
+
+def test_knn_engine_rejects_legacy_interpret_alias():
+    """One canonical interpret spelling across layers: the engine and
+    the kernel boundary both reject the legacy alias with the same
+    pointer to the canonical name."""
+    idx = make_index("spac-h", jnp.asarray(PTS), phi=PHI)
+    with pytest.raises(ValueError, match="pallas-interpret"):
+        idx.knn(QS, K, impl="interpret")
+    with pytest.raises(ValueError, match="unknown kNN impl"):
+        idx.knn(QS, K, impl="bruteforce")
+
+
+# ---------------------------------------------------------------------------
+# compensated distances: exact outside the absolute f32 window
+# ---------------------------------------------------------------------------
+
+_ADV_OFFSET = 1 << 23       # every coordinate far outside |q|^2 exactness
+_ADV_SPREAD = 1 << 9        # tile-local spread well inside the window
+
+
+def _adversarial_data(n: int, q: int, k: int):
+    """Tie-free points/queries at offset 2^23 with spread < 2^9: every
+    coordinate is an exactly-representable f32 integer, (q-p) stays
+    exact (< 2^10), but |q|^2 ~ 7e13 has ulp 2^23 — the plain MXU
+    identity cannot even represent its own intermediates."""
+    for seed in range(64):
+        rng = np.random.default_rng(seed + 100)
+        pts = (_ADV_OFFSET + rng.integers(0, _ADV_SPREAD, size=(n, 2))
+               ).astype(np.int32)
+        qs = (_ADV_OFFSET + rng.integers(0, _ADV_SPREAD, size=(q, 2))
+              ).astype(np.int32)
+        d2 = np.sort(((pts[None].astype(np.int64)
+                       - qs[:, None].astype(np.int64)) ** 2).sum(-1), 1)
+        if (d2[:, k - 1] != d2[:, k]).all():
+            return pts, qs
+    raise AssertionError("no tie-free adversarial seed found")
+
+
+def test_plain_mxu_identity_rounds_at_large_magnitude():
+    """Precondition for the parity test below: on the adversarial data
+    the *uncentered* |q|^2 - 2qp + |p|^2 form diverges from the exact
+    (q-p)^2 distances — catastrophically, not in the last ulp."""
+    pts, qs = _adversarial_data(300, 8, K)
+    exact = ((pts[None].astype(np.int64)
+              - qs[:, None].astype(np.int64)) ** 2).sum(-1)
+    qf = jnp.asarray(qs, jnp.float32)
+    pf = jnp.asarray(pts, jnp.float32)
+    plain = ((qf * qf).sum(-1)[:, None]
+             - 2.0 * qf @ pf.T + (pf * pf).sum(-1)[None, :])
+    err = np.abs(np.asarray(plain, np.float64) - exact)
+    assert err.max() > _ADV_SPREAD ** 2, err.max()
+
+
+@pytest.mark.parametrize("kind", sorted(BACKENDS))
+def test_knn_compensated_parity_outside_f32_window(kind):
+    """impl="pallas-frontier" (and its interpret spelling) is bit-exact
+    against impl="frontier" and the int64 oracle on coordinates far
+    outside the absolute f32-exact window: the centered identity only
+    needs the tile-local spread in the window."""
+    pts, qs = _adversarial_data(300, 8, K)
+    idx = make_index(kind, jnp.asarray(pts), phi=PHI)
+    want_d2 = oracle_knn_d2(pts, qs, K)
+    base_d2, base_ids = idx.knn(jnp.asarray(qs), K, impl="frontier")
+    np.testing.assert_array_equal(np.asarray(base_d2, np.int64), want_d2,
+                                  err_msg=f"{kind}: frontier not exact")
+    for impl in ("pallas-frontier", "pallas-frontier-interpret"):
+        d2, ids = idx.knn(jnp.asarray(qs), K, impl=impl)
+        np.testing.assert_array_equal(
+            np.asarray(d2), np.asarray(base_d2),
+            err_msg=f"{kind}/{impl}: d2 != frontier d2")
+        np.testing.assert_array_equal(
+            np.asarray(ids), np.asarray(base_ids),
+            err_msg=f"{kind}/{impl}: ids != frontier ids")
+
+
+# ---------------------------------------------------------------------------
+# _range_rows: top_k candidate selection == old argsort (regression)
+# ---------------------------------------------------------------------------
+
+def test_range_rows_topk_matches_argsort_reference():
+    """`_range_rows` now selects candidate rows with `lax.top_k` on a
+    negated key; it must reproduce the old full-argsort spelling bit
+    for bit (same rows, same order, same flags) at every bucket size,
+    including buckets past R."""
+    rng = np.random.default_rng(5)
+    pts = rng.integers(0, 1 << 20, size=(3000, 2)).astype(np.int32)
+    idx = make_index("spac-h", jnp.asarray(pts), phi=PHI)
+    view = idx.view()
+    R = view.pts.shape[0]
+    for t in range(10):
+        lo = jnp.asarray(rng.integers(0, 1 << 19, 2), jnp.int32)
+        hi = lo + jnp.asarray(rng.integers(1, 1 << 19, 2), jnp.int32)
+        overlap = np.asarray(
+            queries._boxes_overlap(view.bbox_lo, view.bbox_hi,
+                                   lo[None, :], hi[None, :])
+            & view.active)
+        for max_rows in (4, 128, R, 2 * R):
+            rows, rows_ok, trunc = queries._range_rows(
+                view, lo, hi, max_rows)
+            key = np.where(overlap, np.arange(R), R)
+            want = np.argsort(key, kind="stable")[:max_rows]
+            np.testing.assert_array_equal(np.asarray(rows), want)
+            np.testing.assert_array_equal(np.asarray(rows_ok),
+                                          overlap[want])
+            assert bool(trunc) == (int(overlap.sum()) > max_rows)
 
 
 # ---------------------------------------------------------------------------
@@ -274,7 +389,8 @@ def test_prop_knn_d2_exact():
 
     @settings(max_examples=15, deadline=None)
     @given(st.integers(0, 2**31 - 1), st.integers(10, 150),
-           st.sampled_from(["frontier", "pallas-interpret", "ref"]))
+           st.sampled_from(["frontier", "pallas-interpret",
+                            "pallas-frontier", "ref"]))
     def check(seed, n, impl):
         rng = np.random.default_rng(seed)
         pts = rng.integers(0, 512, size=(n, 2)).astype(np.int32)
@@ -304,10 +420,11 @@ pts = gen.uniform(jax.random.PRNGKey(0), 4096, 2)
 idx = make_index("spac-h", pts, mesh=mesh, phi=8)
 qs = gen.uniform(jax.random.PRNGKey(2), 16, 2)
 
-# kNN through the engine: auto (flat scan at this shard size) and the
-# forced frontier route agree with host brute force
+# kNN through the engine: auto (flat scan at this shard size), the
+# forced frontier route and the fused frontier kernel agree with host
+# brute force
 allp = np.asarray(pts, np.float64)
-for impl in ("auto", "frontier"):
+for impl in ("auto", "frontier", "pallas-frontier"):
     d2, bp, ok = idx.knn(qs, 5, impl=impl)
     for i in range(16):
         bf = np.sort(((allp - np.asarray(qs[i], np.float64)) ** 2

@@ -96,6 +96,34 @@ def test_committed_baselines_validate():
     assert regress.check_baselines() == []
 
 
+def test_baselines_carry_fused_frontier_metrics():
+    """The perf gate must see the fused frontier kernel (PR 9): the
+    roofline baseline carries the tile sweep (chosen defaults + per-tile
+    cells) and both knn cells (auto -> fused vs pinned chunked), and the
+    serve trace's captured plan costs include a pallas-frontier
+    signature. check_baselines enforces the same shape — a baseline
+    regenerated without the new metrics fails the gate."""
+    import os
+
+    with open(os.path.join(regress.RESULTS_DIR, "roofline.json")) as f:
+        roof = json.load(f)
+    sweep = roof["block_sweep"]
+    assert sweep["cells"], "tile sweep cells missing"
+    assert {"block_q", "block_p"} <= set(sweep["chosen"])
+    for kind, row in roof["results"].items():
+        assert "knn" in row and "knn_chunked" in row, kind
+        assert row["knn"]["plan_sig"].startswith("knn.")
+        assert "pallas-frontier" in row["knn"]["plan_sig"], (
+            "auto no longer routes the fused kernel at roofline scale")
+
+    with open(os.path.join(regress.RESULTS_DIR,
+                           "serve_trace.json")) as f:
+        trace = json.load(f)
+    assert any("pallas-frontier" in sig
+               for r in trace["results"].values()
+               for sig in r["cost_model"].get("plan_costs", {}))
+
+
 def test_truncated_baseline_is_flagged(tmp_path):
     for name in ("serve_latency", "fig4_knn", "fig5_range",
                  "fig10_batch", "roofline", "serve_trace"):
