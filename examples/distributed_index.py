@@ -10,12 +10,11 @@ Sec. 5).
     PYTHONPATH=src python examples/distributed_index.py
 """
 
-import os
+import time
 
-os.environ.setdefault("XLA_FLAGS",
-                      "--xla_force_host_platform_device_count=8")
+from repro.configs import platform
 
-import time  # noqa: E402
+mesh = platform.simulate_mesh(8)
 
 import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
@@ -25,7 +24,6 @@ from repro.data import points as gen  # noqa: E402
 
 
 def main():
-    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
     n = 16_384
     key = jax.random.PRNGKey(0)
     pts = gen.uniform(key, n, 2)

@@ -23,13 +23,14 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import sfc
 from .leafstore import scatter_to_rows, segment_bbox
 from .porth import _group_stats
 from .queries import LeafView
 
-KEY_MAX = jnp.uint32(0xFFFFFFFF)
+KEY_MAX = np.uint32(0xFFFFFFFF)  # numpy: keep import device-free
 
 
 @functools.partial(

@@ -505,6 +505,14 @@ class SpatialIndex:
             return self._wrap(tree, rebuild_rows=rows)
         return self._wrap(self._run_update("delete", self._tree, pts, mask))
 
+    def delete_unchecked(self, del_pts, del_mask=None) -> "SpatialIndex":
+        """Dispatch-only delete for the serving runtime — the async
+        counterpart of :meth:`insert_unchecked`. Deletes cannot overflow
+        rows, so for dynamic backends this is :meth:`delete` itself; the
+        alias exists so the server can dispatch every update through the
+        same ``*_unchecked`` spelling regardless of direction."""
+        return self.delete(del_pts, del_mask)
+
     # -- queries (exact by default; see repro.core.engine) -----------------
 
     @property
@@ -560,9 +568,10 @@ def make_index(kind: str, points, mask=None, *, phi: int = 32,
     expected over the index's lifetime (defaults to ``len(points)``);
     ``capacity_rows`` overrides the heuristic outright. Backend-specific
     options (``curve``, ``bits``, ``root_lo``, ``lam``, ...) pass through as
-    keyword params. With ``mesh=`` the index is built SFC-range-partitioned
+    keyword params. With ``mesh=`` the index is built key-range-partitioned
     over the mesh's devices and a :class:`DistributedIndex` is returned
-    (spac-family kinds only).
+    (mesh-capable kinds: the spac family routes by curve code, porth by
+    sieve prefix key).
     """
     if mesh is not None:
         if donate:
@@ -643,16 +652,37 @@ class DistributedIndex:
               n_samples: int = 256, axis: str = "data", **params):
         from . import distributed as D
         backend = get_backend(kind)
-        if backend.curve is None or backend.defaults.get("sort_rows"):
+        pts = jnp.asarray(points)
+        if kind == "porth":
+            # the sieve routes by its own prefix keys (Morton codes from
+            # midpoint comparisons), so float domains shard exactly
+            allowed = ("root_lo", "root_hi", "lam", "rounds")
+            resolved = {k: params.pop(k, backend.defaults[k])
+                        for k in allowed}
+            if params:
+                raise TypeError(f"{kind} (distributed): unknown params "
+                                f"{sorted(params)}")
+            resolved = _porth_resolve(resolved, pts)
+            import numpy as np
+            route_kw = dict(
+                kind="porth",
+                root_lo=tuple(np.asarray(resolved["root_lo"]).tolist()),
+                root_hi=tuple(np.asarray(resolved["root_hi"]).tolist()),
+                lam=int(resolved["lam"]), rounds=int(resolved["rounds"]))
+        elif backend.curve is not None and \
+                not backend.defaults.get("sort_rows"):
+            bits = params.pop("bits", backend.defaults["bits"])
+            coord_bits = params.pop("coord_bits",
+                                    backend.defaults["coord_bits"])
+            if params:
+                raise TypeError(f"{kind} (distributed): unknown params "
+                                f"{sorted(params)}")
+            route_kw = dict(kind="spac", curve=backend.curve, bits=bits,
+                            coord_bits=coord_bits)
+        else:
             raise ValueError(
-                f"distributed indexes require a spac-family kind, "
-                f"got {kind!r}")
-        bits = params.pop("bits", backend.defaults["bits"])
-        coord_bits = params.pop("coord_bits",
-                                backend.defaults["coord_bits"])
-        if params:
-            raise TypeError(f"{kind} (distributed): unknown params "
-                            f"{sorted(params)}")
+                f"distributed indexes require a mesh-capable kind "
+                f"(spac-family or porth), got {kind!r}")
         if capacity_rows is None and capacity_points is not None:
             # per-shard rows for the lifetime maximum, with 2x headroom
             # for routing imbalance
@@ -660,10 +690,8 @@ class DistributedIndex:
             capacity_rows = capacity_for(
                 2 * capacity_points // max(n_shards, 1), phi,
                 backend.cap_slack)
-        build_kw = dict(axis=axis, phi=phi, curve=backend.curve, bits=bits,
-                        coord_bits=coord_bits, capacity_rows=capacity_rows,
-                        slack=slack, n_samples=n_samples)
-        pts = jnp.asarray(points)
+        build_kw = dict(axis=axis, phi=phi, capacity_rows=capacity_rows,
+                        slack=slack, n_samples=n_samples, **route_kw)
         expected = pts.shape[0] if mask is None else int(
             jnp.sum(jnp.asarray(mask, bool)))
         for _ in range(6):
@@ -711,6 +739,21 @@ class DistributedIndex:
         return self._index.dropped
 
     @property
+    def tree(self):
+        """The stacked (n_shards, ...) backend pytree — the same handle
+        the serving runtime uses for memory accounting and barriers on
+        local indexes. Note ``overflowed`` is a stacked per-shard vector
+        here; reduce with ``jnp.any`` before branching on it."""
+        return self._index.tree
+
+    def shard_sizes(self):
+        """Per-shard live point counts, shape (n_shards,) — metadata
+        arithmetic on the stacked leaves, cheap enough for per-shard
+        obs gauges in the serving driver."""
+        from . import distributed as D
+        return D.shard_sizes(self._index)
+
+    @property
     def nbytes(self) -> int:
         """Resident bytes across all shards (metadata arithmetic —
         global arrays report their full logical footprint)."""
@@ -756,12 +799,39 @@ class DistributedIndex:
                                     all_pts.dtype)])
             all_ok = jnp.concatenate([all_ok, jnp.zeros(pad, bool)])
         # the classmethod retries at doubling capacity until the full
-        # multiset fits
+        # multiset fits; routing-key params pass through per kind
+        extra = {k: kw[k] for k in ("bits", "coord_bits", "root_lo",
+                                    "root_hi", "lam", "rounds") if k in kw}
         return DistributedIndex.build(
             self.kind, all_pts, self.mesh, mask=all_ok, phi=self.phi,
             capacity_rows=2 * self._index.tree.pts.shape[-3],
             slack=slack, n_samples=kw["n_samples"], axis=kw["axis"],
-            bits=kw["bits"], coord_bits=kw["coord_bits"])
+            **extra)
+
+    def insert_unchecked(self, pts, mask=None) -> "DistributedIndex":
+        """Dispatch-only insert for the serving runtime: no host-side
+        reads of ``dropped`` or the per-shard ``overflowed`` flags, so
+        the call returns once the cached shard_map program is enqueued
+        and queries against older versions overlap with it on device.
+
+        Both failure signals are sticky (``overflowed`` per shard in the
+        stacked tree, ``dropped`` accumulated on the DistIndex) — the
+        caller owns checking them at its next sync point;
+        :class:`repro.serving.SpatialServer` defers both to ``commit()``
+        and replays from the last good version."""
+        from . import distributed as D
+        out = D.insert(self._index, jnp.asarray(pts), self.mesh, mask,
+                       slack=self.slack)
+        return self._wrap(out)
+
+    def delete_unchecked(self, pts, mask=None) -> "DistributedIndex":
+        """Dispatch-only delete: like :meth:`insert_unchecked`, skips the
+        host-side ``dropped`` check (a dropped delete entry means a point
+        that should have died survives — caught at commit)."""
+        from . import distributed as D
+        out = D.delete(self._index, jnp.asarray(pts), self.mesh, mask,
+                       slack=self.slack)
+        return self._wrap(out)
 
     def delete(self, pts, mask=None) -> "DistributedIndex":
         """Batch delete. A skewed batch can overflow the routing slab, in

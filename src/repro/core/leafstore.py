@@ -12,8 +12,14 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-BIG = jnp.float32(3.4e38)  # +inf stand-in that survives arithmetic
+# +inf stand-in that survives arithmetic. A *numpy* scalar, not a jnp
+# one: a device constant here would initialize the jax backend at
+# import time and lock the topology before repro.configs.platform can
+# stage a simulated mesh (the driver's --mesh flag relies on imports
+# staying device-free).
+BIG = np.float32(3.4e38)
 
 
 def chunk_rows_from_sorted(n_total: int, phi: int):

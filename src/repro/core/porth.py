@@ -35,13 +35,14 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .leafstore import (chunk_rows_from_sorted, compact_rows, ranked_delete,
                         row_bbox_from_slots, scatter_to_rows, segment_bbox,
                         take_k_where)
 from .queries import LeafView
 
-KEY_MAX = jnp.uint32(0xFFFFFFFF)
+KEY_MAX = np.uint32(0xFFFFFFFF)  # numpy: keep import device-free
 
 
 @functools.partial(
@@ -261,11 +262,15 @@ def _empty_arrays(R: int, C: int, dim: int, dtype):
     )
 
 
-@functools.partial(jax.jit, static_argnames=("phi", "lam", "rounds",
-                                             "capacity_rows"))
-def build(points, root_lo, root_hi, mask=None, *, phi: int = 32,
-          lam: int = 3, rounds: int = 5,
-          capacity_rows: int | None = None) -> POrthTree:
+def build_impl(points, root_lo, root_hi, mask=None, *, phi: int = 32,
+               lam: int = 3, rounds: int = 5,
+               capacity_rows: int | None = None) -> POrthTree:
+    """BuildPOrthTree via the segmented sieve.
+
+    Unjitted spelling — the only legal call inside a shard_map region
+    (jax 0.4.x miscompiles a nested jit there; see ROADMAP "Contracts",
+    rule jit-in-shard-map). Single-device callers use :data:`build`.
+    """
     n, dim = points.shape
     assert lam * rounds * dim <= 31, "key exceeds uint32 (enable x64 path)"
     if mask is None:
@@ -294,20 +299,34 @@ def build(points, root_lo, root_hi, mask=None, *, phi: int = 32,
                      phi=phi, lam=lam, rounds=rounds)
 
 
+build = jax.jit(build_impl, static_argnames=("phi", "lam", "rounds",
+                                             "capacity_rows"))
+
+
 # ---------------------------------------------------------------------------
 # routing
 # ---------------------------------------------------------------------------
 
-def _point_keys(tree: POrthTree, pts):
-    """Full-depth prefix key of each point via midpoint comparisons."""
+def point_keys(pts, root_lo, root_hi, *, lam: int, rounds: int):
+    """Full-depth prefix key of each point via midpoint comparisons.
+
+    These keys ARE Morton codes over the orth skeleton — they fall out
+    of the sieve's comparisons without encoding, so they work for any
+    coordinate dtype (float included). Standalone spelling: the
+    distributed router calls it before a tree exists on the shard."""
     n, dim = pts.shape
-    lo = jnp.broadcast_to(tree.root_lo, (n, dim)).astype(pts.dtype)
-    hi = jnp.broadcast_to(tree.root_hi, (n, dim)).astype(pts.dtype)
+    lo = jnp.broadcast_to(root_lo, (n, dim)).astype(pts.dtype)
+    hi = jnp.broadcast_to(root_hi, (n, dim)).astype(pts.dtype)
     key = jnp.zeros(n, jnp.uint32)
-    for _ in range(tree.rounds):
-        bucket, lo, hi = _split_lambda_levels(pts, lo, hi, tree.lam, dim)
-        key = (key << (tree.lam * dim)) | bucket
+    for _ in range(rounds):
+        bucket, lo, hi = _split_lambda_levels(pts, lo, hi, lam, dim)
+        key = (key << (lam * dim)) | bucket
     return key
+
+
+def _point_keys(tree: POrthTree, pts):
+    return point_keys(pts, tree.root_lo, tree.root_hi, lam=tree.lam,
+                      rounds=tree.rounds)
 
 
 def _route(tree: POrthTree, pkeys, ok):
@@ -369,9 +388,13 @@ def _empty_cell_seed(tree: POrthTree, pts, pkeys, missed):
 # batch insertion (paper Alg. 2)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnames=("max_overflow_rows",))
-def insert(tree: POrthTree, new_pts, new_mask=None, *,
-           max_overflow_rows: int = 64) -> POrthTree:
+def insert_impl(tree: POrthTree, new_pts, new_mask=None, *,
+                max_overflow_rows: int = 64) -> POrthTree:
+    """Batch insertion (all-or-nothing; sticky ``overflowed`` on
+    capacity shortfall).
+
+    Unjitted spelling for shard_map regions; use :data:`insert` outside.
+    """
     m, dim = new_pts.shape
     new_pts = new_pts.astype(tree.pts.dtype)
     if new_mask is None:
@@ -464,6 +487,9 @@ def insert(tree: POrthTree, new_pts, new_mask=None, *,
                         new_tree, failed)
 
 
+insert = jax.jit(insert_impl, static_argnames=("max_overflow_rows",))
+
+
 def ovalid_mask(orow_ids, R: int):
     m = jnp.zeros(R + 1, bool).at[
         jnp.where(orow_ids >= 0, orow_ids, R)].set(True)
@@ -490,8 +516,15 @@ def _reset_rows(arrays, mask):
 # batch deletion
 # ---------------------------------------------------------------------------
 
-@jax.jit
-def delete(tree: POrthTree, del_pts, del_mask=None) -> POrthTree:
+def delete_impl(tree: POrthTree, del_pts, del_mask=None) -> POrthTree:
+    """Batch deletion + one merge pass.
+
+    Unjitted spelling for shard_map regions — this matters doubly here:
+    the while_loop below under a nested jit is the documented jax 0.4.x
+    shard_map miscompile, and the trailing merge pass must also run as
+    its ``_impl`` (a jitted ``merge_pass`` call nested inside the shard
+    region would reintroduce exactly that bug *without* tripping the
+    lexical jit-in-shard-map lint). Use :data:`delete` outside."""
     m, dim = del_pts.shape
     del_pts = del_pts.astype(tree.pts.dtype)
     if del_mask is None:
@@ -544,13 +577,18 @@ def delete(tree: POrthTree, del_pts, del_mask=None) -> POrthTree:
                   cell_depth=jnp.where(active, tree.cell_depth, 0))
     order, num_rows = _rebuild_order(arrays["active"], arrays["cell_key"])
     out = dataclasses.replace(tree, **arrays, order=order, num_rows=num_rows)
-    return merge_pass(out)
+    return merge_pass_impl(out)
 
 
-@jax.jit
-def merge_pass(tree: POrthTree) -> POrthTree:
+delete = jax.jit(delete_impl)
+
+
+def merge_pass_impl(tree: POrthTree) -> POrthTree:
     """One level of the paper's post-deletion flattening: sibling groups that
-    are all leaves and whose total fits a leaf merge into their parent cell."""
+    are all leaves and whose total fits a leaf merge into their parent cell.
+
+    Unjitted spelling (called from ``delete_impl``, which must stay
+    jit-free end to end for shard_map); use :data:`merge_pass` outside."""
     R, C, dim = tree.pts.shape
     rem = jnp.clip(tree.key_bits - (tree.cell_depth - 1) * tree.dim,
                    0, 31).astype(jnp.uint32)
@@ -609,6 +647,9 @@ def merge_pass(tree: POrthTree) -> POrthTree:
                                    num_rows=num_rows)
     ok_all = can_alloc | ~proceed
     return jax.tree.map(lambda a, b: jnp.where(ok_all, a, b), new_tree, tree)
+
+
+merge_pass = jax.jit(merge_pass_impl)
 
 
 def _cell_bounds_at_depth(tree: POrthTree, pts, target_depth):

@@ -31,6 +31,7 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import sfc
 from .leafstore import (append_unsorted, chunk_rows_from_sorted, compact_rows,
@@ -38,7 +39,7 @@ from .leafstore import (append_unsorted, chunk_rows_from_sorted, compact_rows,
                         scatter_to_rows, segment_bbox, take_k_where)
 from .queries import LeafView
 
-CODE_MAX = jnp.uint32(0xFFFFFFFF)
+CODE_MAX = np.uint32(0xFFFFFFFF)  # numpy: keep import device-free
 
 
 @functools.partial(

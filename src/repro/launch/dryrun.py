@@ -1,10 +1,13 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+from repro.configs import platform as _platform
 
-# The two lines above MUST run before any jax-touching import: jax locks
-# the device count at first init, and the production meshes need 512
-# placeholder host devices. Never set this globally — smoke tests and
-# benchmarks see the real single device.
+_platform.stage(host_device_count=512)
+
+# Staging MUST run before any jax-touching import: jax locks the device
+# count at first backend init, and the production meshes need 512
+# placeholder host devices. repro.configs.platform composes with an
+# existing XLA_FLAGS (a user's other flags survive) and raises early if
+# the backend already initialized with a different topology. Never set
+# this globally — smoke tests and benchmarks see the real single device.
 
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 

@@ -149,8 +149,51 @@ def _suite_fig10(verbose: bool) -> dict:
             for key, v in rec["spac-h"].items()}
 
 
+def _suite_dist(verbose: bool) -> dict:
+    """Distributed serving smoke on the simulated 8-device mesh.
+
+    Runs the driver in a **subprocess**: the forced host device count
+    must be staged before jax initializes, and the other suites have
+    long since initialized this process single-device. Gates structure
+    only (routing balance + exact final sizes) — mesh-over-one-CPU
+    wall times measure the simulation, not the system."""
+    import subprocess
+    import sys
+    import tempfile
+    n_shards = 8
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "dist_smoke.json")
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.pathsep.join(
+            p for p in ("src", env.get("PYTHONPATH", "")) if p)
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.serving.driver", "--smoke",
+             "--mesh", str(n_shards), "--json", path],
+            capture_output=True, text=True, env=env)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"distributed smoke failed:\n{proc.stdout}{proc.stderr}")
+        if verbose:
+            sys.stdout.write(proc.stdout)
+        with open(path) as f:
+            payload = json.load(f)
+    out: dict = {}
+    for scen, r in payload["results"]["spac-h"].items():
+        d = r["distributed"]
+        # deterministic functions of the seeded workload: final live
+        # count and the per-shard balance of the key-range routing
+        out[f"dist.{scen}.final_size"] = \
+            metric(r["final_size"], "higher", "struct")
+        out[f"dist.{scen}.shard_min_points"] = \
+            metric(d["shard_min_points"], "higher", "struct")
+        out[f"dist.{scen}.shard_max_points"] = \
+            metric(d["shard_max_points"], "lower", "struct")
+    return out
+
+
 SUITES = {"serve": _suite_serve, "fig4": _suite_fig4,
-          "fig5": _suite_fig5, "fig10": _suite_fig10}
+          "fig5": _suite_fig5, "fig10": _suite_fig10,
+          "dist": _suite_dist}
 
 
 def collect(suite_names, verbose: bool = True) -> dict:

@@ -227,8 +227,9 @@ class MicroBatcher:
             cols = [_concat_pad([r[1][i] for r in reqs], q)
                     for i in range(len(reqs[0][1]))]
             if op == "knn":
-                d2, ids = target.knn(cols[0], key[1], impl=key[4])
-                outs = (d2, ids)
+                # local indexes answer (d2, ids); distributed snapshots
+                # answer (d2, points, valid) — slice whatever came back
+                outs = tuple(target.knn(cols[0], key[1], impl=key[4]))
             elif op == "range_count":
                 outs = (target.range_count(cols[0], cols[1]),)
             else:

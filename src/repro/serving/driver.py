@@ -84,6 +84,7 @@ class DriverCfg:
     seed: int = 0
     dim: int = 2
     phi: int = 32
+    mesh: int = 0             # simulated shard count (0 = single-device)
 
 
 def _query_stream(cfg: DriverCfg, scenario: str, step: int):
@@ -101,16 +102,18 @@ def _query_stream(cfg: DriverCfg, scenario: str, step: int):
 
 
 def run_one(kind: str, scenario: str, cfg: DriverCfg,
-            verbose: bool = False) -> dict:
+            verbose: bool = False, mesh=None) -> dict:
     """Replay one (backend, scenario) trace; returns latency summary +
-    sustained throughput for the measured window."""
+    sustained throughput for the measured window. With ``mesh`` the
+    server's head index is mesh-sharded (``DistributedIndex``) and the
+    summary gains a per-shard ``distributed`` section."""
     total = cfg.warmup + cfg.steps
     trace = gen.make_trace(scenario, seed=cfg.seed, n=cfg.n,
                            batch=cfg.batch, steps=total, dim=cfg.dim)
     t0 = time.perf_counter()
     srv = SpatialServer.build(kind, trace.bootstrap, phi=cfg.phi,
                               capacity_points=trace.max_live,
-                              window=cfg.window)
+                              window=cfg.window, mesh=mesh)
     jax.block_until_ready(srv.head_index.tree)
     build_s = time.perf_counter() - t0
     batcher = MicroBatcher(max_batch=cfg.queries,
@@ -183,6 +186,20 @@ def run_one(kind: str, scenario: str, cfg: DriverCfg,
         "final_size": len(srv.head_index),
         "recoveries": srv.stats["recoveries"],
     }
+    if mesh is not None:
+        # per-shard balance report: live points per shard from the
+        # key-range routing, plus the cumulative routing-drop counter
+        # (0 after checked updates / commit — drops trigger replay)
+        sizes = np.asarray(srv.head_index.shard_sizes())
+        for i, s in enumerate(sizes.tolist()):
+            obs.gauge(f"server.shard{i}.live_points", int(s))
+        out["distributed"] = {
+            "n_shards": int(sizes.shape[0]),
+            "shard_points": [int(s) for s in sizes.tolist()],
+            "shard_min_points": int(sizes.min()),
+            "shard_max_points": int(sizes.max()),
+            "dropped": int(srv.head_index.dropped),
+        }
     for key in ("query_per_s", "update_pts_per_s"):
         out["throughput"][key] = out["throughput"][key] / max(wall, 1e-9)
     if verbose:
@@ -197,11 +214,18 @@ def run_one(kind: str, scenario: str, cfg: DriverCfg,
               f"mem {obs.fmt_bytes(mem['live_bytes'])} steady / "
               f"{obs.fmt_bytes(mem['peak_window_bytes'])} peak",
               flush=True)
+        if mesh is not None:
+            d = out["distributed"]
+            print(f"    shards={d['n_shards']} "
+                  f"points/shard min={d['shard_min_points']} "
+                  f"max={d['shard_max_points']} "
+                  f"dropped={d['dropped']}", flush=True)
     return out
 
 
 def run(kinds=DEFAULT_KINDS, scenarios=gen.SCENARIOS,
-        cfg: DriverCfg = DriverCfg(), verbose: bool = True) -> dict:
+        cfg: DriverCfg = DriverCfg(), verbose: bool = True,
+        mesh=None) -> dict:
     """Sweep kinds x scenarios; returns the full json-able payload."""
     payload = {"config": dataclasses.asdict(cfg), "kinds": list(kinds),
                "scenarios": list(scenarios), "results": {}}
@@ -209,7 +233,8 @@ def run(kinds=DEFAULT_KINDS, scenarios=gen.SCENARIOS,
         if verbose:
             print(f"{kind}:", flush=True)
         payload["results"][kind] = {
-            scenario: run_one(kind, scenario, cfg, verbose=verbose)
+            scenario: run_one(kind, scenario, cfg, verbose=verbose,
+                              mesh=mesh)
             for scenario in scenarios}
     return payload
 
@@ -371,6 +396,11 @@ def main(argv=None):
     ap.add_argument("--max-delay-ms", type=float,
                     default=DriverCfg.max_delay_ms)
     ap.add_argument("--seed", type=int, default=DriverCfg.seed)
+    ap.add_argument("--mesh", type=int, default=0, metavar="N",
+                    help="serve from a DistributedIndex sharded over a "
+                    "simulated N-device CPU mesh (stages "
+                    "--xla_force_host_platform_device_count before jax "
+                    "initializes; adds per-shard metrics)")
     ap.add_argument("--json", nargs="?", const=DEFAULT_JSON, default=None,
                     metavar="PATH", help="write the latency/throughput "
                     f"payload (default {DEFAULT_JSON})")
@@ -389,6 +419,13 @@ def main(argv=None):
                     "into batcher-wait/dispatch/device segments "
                     f"(default {DEFAULT_SERVE_TRACE})")
     args = ap.parse_args(argv)
+    mesh = None
+    if args.mesh:
+        # must precede anything that initializes the jax backend (the
+        # module-level jax import above is fine — topology locks at the
+        # first devices()/array op, not at import)
+        from ..configs import platform
+        mesh = platform.simulate_mesh(args.mesh)
     rec_obs = obs.install(obs.Recorder()) if args.obs_trace else None
 
     def _export_obs():
@@ -402,11 +439,17 @@ def main(argv=None):
 
     if args.smoke:
         cfg = DriverCfg(n=1500, batch=128, steps=2, warmup=1, queries=16,
-                        k=5, seed=args.seed)
-        payload = run(kinds=("spac-h",), scenarios=gen.SCENARIOS, cfg=cfg)
+                        k=5, seed=args.seed, mesh=args.mesh)
+        payload = run(kinds=("spac-h",), scenarios=gen.SCENARIOS, cfg=cfg,
+                      mesh=mesh)
         ops = {op for r in payload["results"]["spac-h"].values()
                for op, s in r["latency_ms"].items() if s["count"]}
         assert {"insert", "delete", "knn", "range", "commit"} <= ops, ops
+        if mesh is not None:
+            for r in payload["results"]["spac-h"].values():
+                d = r["distributed"]
+                assert d["n_shards"] == args.mesh, d
+                assert sum(d["shard_points"]) == r["final_size"], d
         _export_obs()
         if args.json:   # the perf-regression gate replays this payload
             os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
@@ -418,10 +461,12 @@ def main(argv=None):
     cfg = DriverCfg(n=args.n, batch=args.batch, steps=args.steps,
                     warmup=args.warmup, queries=args.queries, k=args.k,
                     window=args.window, max_delay_ms=args.max_delay_ms,
-                    seed=args.seed)
+                    seed=args.seed, mesh=args.mesh)
     if args.attributed:
         assert rec_obs is None, \
             "--attributed manages its own recorder; drop --obs-trace"
+        assert mesh is None, \
+            "--attributed compares obs on/off single-device; drop --mesh"
         scenario = args.scenarios.split(",")[0]
         payload = run_attributed(kinds=tuple(args.kinds.split(",")),
                                  scenario=scenario, cfg=cfg)
@@ -432,7 +477,7 @@ def main(argv=None):
         print(f"wrote attributed serve baseline -> {args.attributed}")
         return
     payload = run(kinds=args.kinds.split(","),
-                  scenarios=args.scenarios.split(","), cfg=cfg)
+                  scenarios=args.scenarios.split(","), cfg=cfg, mesh=mesh)
     _export_obs()
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)

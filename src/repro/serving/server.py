@@ -33,9 +33,18 @@ queries with **no barrier between them**:
 
 Snapshot isolation requires old versions' buffers to stay live, so the
 server refuses a ``donate=True`` index — the bounded window replaces
-donation as the memory-control mechanism. Distributed serving
-(``DistributedIndex`` behind the same surface) is future work; see
-ROADMAP "Serving runtime (PR 3)".
+donation as the memory-control mechanism.
+
+The same lineage fronts a mesh-sharded head
+(:class:`repro.core.index.DistributedIndex`, ``build(..., mesh=)``):
+updates dispatch through the cached shard_map exchange and queries
+through the engine's distributed merge, both version-functional, so
+snapshots/window/commit work unchanged. Distribution adds a second
+deferred failure signal next to sticky ``overflowed`` (now a per-shard
+vector, reduced with :func:`_overflowed`): the routing slab's
+``dropped`` counter. Both are checked at the same sync points and both
+trigger the same commit-time replay — see tests/test_serving_distributed.py
+and ROADMAP "Distributed serving (PR 10)".
 """
 
 from __future__ import annotations
@@ -48,7 +57,15 @@ import numpy as np
 
 from .. import obs
 from ..core import make_index
-from ..core.index import SpatialIndex
+from ..core.index import DistributedIndex, SpatialIndex
+
+
+def _overflowed(tree) -> bool:
+    """Deferred sticky-overflow read, shape-agnostic: scalar flag on a
+    local tree, per-shard (n_shards,) vector on a distributed head (any
+    shard overflowing dirties the version)."""
+    flag = getattr(tree, "overflowed", None)
+    return flag is not None and bool(jnp.any(flag))
 
 
 class Snapshot:
@@ -117,6 +134,13 @@ class SpatialServer:
         # was read clean, plus every op dispatched since
         self._base = 0
         self._base_index = index
+        # distributed heads add a second sticky failure signal: the
+        # routing-slab `dropped` counter. Construction is a sync point,
+        # so reading the baseline here is free; dispatch paths only ever
+        # compare against it at eviction/commit barriers.
+        self._distributed = isinstance(index, DistributedIndex)
+        self._base_dropped = (int(index.dropped) if self._distributed
+                              else 0)
         self._log: list[tuple[str, object, object]] = []
         self.stats = {"inserts": 0, "deletes": 0, "commits": 0,
                       "recoveries": 0, "update_points": 0}
@@ -131,8 +155,6 @@ class SpatialServer:
         deferred overflow check never trips."""
         if make_kw.get("donate"):
             raise ValueError("SpatialServer does not support donate=True")
-        if make_kw.get("mesh") is not None:
-            raise ValueError("distributed serving is not supported yet")
         return cls(make_index(kind, points, **make_kw), window=window)
 
     # -- introspection -----------------------------------------------------
@@ -196,11 +218,12 @@ class SpatialServer:
 
     def delete(self, pts, mask=None) -> int:
         """Dispatch a batch delete as version ``head+1`` (deletes never
-        overflow, so this is async for dynamic backends as-is)."""
+        overflow rows; distributed heads defer their routing-slab
+        ``dropped`` check, so dispatch stays async there too)."""
         with obs.span("serving.delete") as sp:
             pts = jnp.asarray(pts)
             sp.set(rows=pts.shape[0], version=self._head + 1)
-            new = self.head_index.delete(pts, mask)
+            new = self.head_index.delete_unchecked(pts, mask)
             self.stats["deletes"] += 1
             self.stats["update_points"] += self._live_rows(pts, mask)
             return self._publish(new, ("delete", pts, mask))
@@ -231,7 +254,13 @@ class SpatialServer:
                 # *evicted* version bounds device-queue depth without
                 # stalling head
                 jax.block_until_ready(old.tree)
-            if bool(getattr(old.tree, "overflowed", False)):
+            # past the barrier both sticky reads are free; a distributed
+            # version is dirty if any shard overflowed OR the routing
+            # slab dropped entries since the last clean baseline
+            dirty = _overflowed(old.tree) or (
+                self._distributed
+                and int(old.dropped) != self._base_dropped)
+            if dirty:
                 self._recover()
             elif v > self._base:
                 # fast-forward the recovery base: ops up to v are clean
@@ -253,8 +282,9 @@ class SpatialServer:
             sp.set(version=self._head, in_flight=self._head - self._base)
             head = self._versions[self._head]
             jax.block_until_ready(head.tree)
-            if hasattr(head.tree, "overflowed") and \
-                    bool(head.tree.overflowed):
+            if _overflowed(head.tree) or (
+                    self._distributed
+                    and int(head.dropped) != self._base_dropped):
                 head = self._recover()
             if self._deferred_points:
                 # past the barrier these reads are free; see _live_rows
@@ -262,6 +292,8 @@ class SpatialServer:
                     int(x) for x in self._deferred_points)
                 self._deferred_points = []
             self._base, self._base_index = self._head, head
+            if self._distributed:
+                self._base_dropped = int(head.dropped)
             self._log = []
             self._versions = OrderedDict({self._head: head})
             self._rebase_memory(head)
@@ -284,6 +316,11 @@ class SpatialServer:
             jax.block_until_ready(idx.tree)
         self._versions = OrderedDict({self._head: idx})
         self._base, self._base_index = self._head, idx
+        if self._distributed:
+            # the replayed head is the new clean baseline for the
+            # routing-slab counter (checked ops guarantee no new drops,
+            # but a mid-replay re-shard resets the cumulative count)
+            self._base_dropped = int(idx.dropped)
         self._log = []
         self._rebase_memory(idx)
         self.stats["recoveries"] += 1

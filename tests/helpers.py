@@ -11,6 +11,8 @@ work takes roughly 4x as long — so the budget scales with
 from __future__ import annotations
 
 import os
+import subprocess
+import sys
 
 
 def scaled_timeout(base_s: float, devices: int = 8) -> float:
@@ -19,3 +21,28 @@ def scaled_timeout(base_s: float, devices: int = 8) -> float:
     budget rather than a flaky kill."""
     cores = os.cpu_count() or 1
     return base_s * max(1.0, devices / (2.0 * cores))
+
+
+def run_on_simulated_mesh(script: str, n_devices: int = 8, *,
+                          timeout_base_s: float = 900.0,
+                          expect: str | None = None):
+    """Run ``script`` in a child process on a simulated ``n_devices``
+    CPU mesh (``repro.configs.platform.simulate_mesh``).
+
+    The forced host device count must be staged before jax initializes,
+    which a pytest process (whose earlier tests already touched jax)
+    cannot do — so the script runs in a fresh interpreter with a
+    prelude that stages the platform *first* and binds the resulting
+    1-D device mesh to the name ``mesh``. When ``expect`` is given the
+    child's stdout must contain it (stderr is attached to the assertion
+    for debugging); the completed process is returned either way."""
+    prelude = ("from repro.configs import platform as _platform\n"
+               f"mesh = _platform.simulate_mesh({int(n_devices)})\n")
+    out = subprocess.run(
+        [sys.executable, "-c", prelude + script], capture_output=True,
+        text=True, timeout=scaled_timeout(timeout_base_s, n_devices),
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root"})
+    if expect is not None:
+        assert expect in out.stdout, out.stdout + out.stderr
+    return out

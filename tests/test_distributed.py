@@ -1,28 +1,24 @@
-"""Distributed-index tests (8 forced host devices, subprocess).
+"""Distributed-index tests on the CI-simulated mesh (subprocess).
 
-The forced device count must be set before jax initializes, so the
-actual work runs in a child process; one child covers the full
-lifecycle to amortize compile time."""
+The forced host device count must be staged before jax initializes, so
+the actual work runs in a child process via
+``helpers.run_on_simulated_mesh``; one child covers the full lifecycle
+to amortize compile time. The 8-device lifecycle is fast-tier mesh
+smoke (it exercises the full shard_map exchange); only the
+multi-host-scale sweep stays ``slow``.
+"""
 
 from __future__ import annotations
 
-import subprocess
-import sys
-
 import pytest
 
-from helpers import scaled_timeout
-
-pytestmark = pytest.mark.slow  # 8-device shard_map compile exceeds fast tier
+from helpers import run_on_simulated_mesh
 
 SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from repro.core import distributed as D
 from repro.data import points as gen
 
-mesh = jax.make_mesh((8,), ("data",))
 key = jax.random.PRNGKey(0)
 pts = gen.uniform(key, 4096, 2)
 idx = D.build(pts, mesh, phi=8)
@@ -53,6 +49,12 @@ for i in range(8):
     bf = int(jnp.sum(jnp.all((allp >= lo[i]) & (allp <= hi[i]), -1)))
     assert int(cnt[i]) == bf, (i, int(cnt[i]), bf)
 
+# splitter balance: uniform data must spread over every shard (the
+# quantile sample must not be polluted by pad sentinels)
+sizes = np.asarray(D.shard_sizes(idx))
+assert sizes.min() > 0, sizes
+assert sizes.sum() == int(D.size(idx))
+
 # skewed routing (sweepline): slab overflow is *detected*, and a larger
 # slack absorbs it
 sw = gen.sweepline(jax.random.PRNGKey(4), 4096, 2)
@@ -70,9 +72,35 @@ print("DISTRIBUTED_OK")
 
 
 def test_distributed_index_lifecycle():
-    out = subprocess.run(
-        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
-        timeout=scaled_timeout(560),
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"})
-    assert "DISTRIBUTED_OK" in out.stdout, out.stdout + out.stderr
+    run_on_simulated_mesh(SCRIPT, 8, timeout_base_s=560,
+                          expect="DISTRIBUTED_OK")
+
+
+_SCALE_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import distributed as D
+from repro.data import points as gen
+
+pts = gen.uniform(jax.random.PRNGKey(0), 1 << 16, 2)
+idx = D.build(pts, mesh, phi=32)
+assert int(idx.dropped) == 0
+assert int(D.size(idx)) == 1 << 16
+idx = D.insert(idx, gen.uniform(jax.random.PRNGKey(1), 1 << 14, 2), mesh)
+assert int(idx.dropped) == 0
+qs = gen.uniform(jax.random.PRNGKey(2), 8, 2)
+d2, bp, ok = D.knn(idx, qs, 10, mesh)
+allp = jnp.concatenate(
+    [pts, gen.uniform(jax.random.PRNGKey(1), 1 << 14, 2)]
+).astype(jnp.float32)
+for i in range(8):
+    diff = allp - qs[i].astype(jnp.float32)
+    bf = jnp.sort(jnp.sum(diff * diff, -1))[:10]
+    assert np.allclose(np.sort(np.asarray(d2[i])), np.asarray(bf)), i
+print("SCALE_OK")
+"""
+
+
+@pytest.mark.slow  # 32-way shard_map at 64K points: multi-host-scale
+def test_distributed_index_scale_32shards():
+    run_on_simulated_mesh(_SCALE_SCRIPT, 32, timeout_base_s=1200,
+                          expect="SCALE_OK")

@@ -13,7 +13,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from helpers import scaled_timeout
 from repro.core import (BACKENDS, baselines, capacity_for, engine,
                         get_backend, make_index, porth, queries, spac)
 
@@ -229,26 +228,18 @@ def test_size_and_views():
 
 
 def _run_distributed(script: str):
-    """Run a distributed scenario in a subprocess (the forced device
-    count must precede jax init; one scenario per process keeps each
-    under the compile-time budget of a small CPU box)."""
-    import subprocess
-    import sys
-    out = subprocess.run(
-        [sys.executable, "-c", script], capture_output=True, text=True,
-        timeout=scaled_timeout(1200),
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"})
-    assert "RECOVERY_OK" in out.stdout, out.stdout + out.stderr
+    """Run a distributed scenario on the simulated 8-device mesh (one
+    scenario per process keeps each under the compile-time budget of a
+    small CPU box)."""
+    from helpers import run_on_simulated_mesh
+    run_on_simulated_mesh(_DIST_PRELUDE + script, 8,
+                          timeout_base_s=1200, expect="RECOVERY_OK")
 
 
 _DIST_PRELUDE = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
 from repro.core import make_index
 from repro.data import points as gen
-mesh = jax.make_mesh((8,), ("data",))
 """
 
 
@@ -256,7 +247,7 @@ mesh = jax.make_mesh((8,), ("data",))
 def test_distributed_row_overflow_recovery():
     """Shard-row overflow re-shards at doubled capacity: no point lost,
     callers never see ``overflowed``."""
-    _run_distributed(_DIST_PRELUDE + r"""
+    _run_distributed(r"""
 pts = gen.uniform(jax.random.PRNGKey(0), 2048, 2)
 idx = make_index("spac-h", pts, mesh=mesh, phi=8, capacity_rows=40)
 idx = idx.insert(gen.uniform(jax.random.PRNGKey(1), 4096, 2))
@@ -270,7 +261,7 @@ print("RECOVERY_OK")
 def test_distributed_slab_overflow_recovery():
     """A skewed delete under a deliberately tight routing slab escalates
     slack instead of silently skipping the overflowed deletions."""
-    _run_distributed(_DIST_PRELUDE + r"""
+    _run_distributed(r"""
 sw = gen.sweepline(jax.random.PRNGKey(4), 2048, 2)
 sidx = make_index("spac-h", sw, mesh=mesh, phi=8)
 sidx.slack = 0.25

@@ -23,14 +23,11 @@ off by orders of magnitude.
 
 from __future__ import annotations
 
-import subprocess
-import sys
-
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from helpers import scaled_timeout
+from helpers import run_on_simulated_mesh
 from repro.core import BACKENDS, engine, make_index, queries
 
 PHI = 8
@@ -409,13 +406,10 @@ def test_prop_knn_d2_exact():
 # ---------------------------------------------------------------------------
 
 _DIST_SCRIPT = r"""
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from repro.core import make_index
 from repro.data import points as gen
 
-mesh = jax.make_mesh((8,), ("data",))
 pts = gen.uniform(jax.random.PRNGKey(0), 4096, 2)
 idx = make_index("spac-h", pts, mesh=mesh, phi=8)
 qs = gen.uniform(jax.random.PRNGKey(2), 16, 2)
@@ -444,11 +438,8 @@ print("DIST_ENGINE_OK")
 """
 
 
-@pytest.mark.slow
 def test_distributed_engine_queries():
-    out = subprocess.run(
-        [sys.executable, "-c", _DIST_SCRIPT], capture_output=True,
-        text=True, timeout=scaled_timeout(900),
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"})
-    assert "DIST_ENGINE_OK" in out.stdout, out.stdout + out.stderr
+    # fast-tier mesh smoke: the 8-device simulated mesh exercises the
+    # full distributed query path (see tests/helpers.py)
+    run_on_simulated_mesh(_DIST_SCRIPT, 8, timeout_base_s=900,
+                          expect="DIST_ENGINE_OK")
